@@ -1,0 +1,34 @@
+"""Figures 1-2: communication<->memory tradeoff of MP-DSVRG as b sweeps at
+fixed sample budget; statistical error must stay flat (Thm 7/10)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import theory
+from repro.core.losses import loss_constants
+from repro.core.mp_dsvrg import run_mp_dsvrg
+from repro.data.synthetic import LeastSquaresStream
+
+
+def run():
+    stream = LeastSquaresStream(dim=32, noise=0.1, seed=0)
+    X, y = stream.sample(jax.random.PRNGKey(1), 4096)
+    L, beta = loss_constants(X, y, radius=1.0)
+    spec = theory.ProblemSpec(L=L, beta=beta, B=1.0, dim=32)
+    m, n_local = 4, 1024
+    for b in [32, 128, 512, 1024]:
+        T = n_local // b
+        t0 = time.perf_counter()
+        res = run_mp_dsvrg(stream, spec, m, b, T)
+        us = (time.perf_counter() - t0) * 1e6
+        sub = float(stream.population_suboptimality(res.w_avg))
+        emit(f"fig1_tradeoff/b={b}", us,
+             f"subopt={sub:.5f};comm={res.ledger.comm_rounds};"
+             f"mem={res.ledger.peak_memory_vectors}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Theorems 4/5/7: empirical suboptimality vs the proved bounds."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import theory
+from repro.core.losses import loss_constants
+from repro.core.minibatch_prox import run_minibatch_prox
+from repro.data.synthetic import LeastSquaresStream
+
+
+def run():
+    stream = LeastSquaresStream(dim=32, noise=0.1, seed=0)
+    X, y = stream.sample(jax.random.PRNGKey(1), 4096)
+    L, beta = loss_constants(X, y, radius=1.0)
+    spec = theory.ProblemSpec(L=L, beta=beta, B=1.0, dim=32)
+
+    # Thm 4 (exact, weakly convex): same bT => same error; bound holds
+    for (b, T) in [(32, 32), (128, 8), (512, 2)]:
+        t0 = time.perf_counter()
+        res = run_minibatch_prox(stream, spec, b, T, solver="exact")
+        us = (time.perf_counter() - t0) * 1e6
+        sub = float(stream.population_suboptimality(res.w_avg))
+        bound = theory.rate_bound_weakly_convex(spec, b, T)
+        emit(f"thm4/b={b},T={T}", us,
+             f"subopt={sub:.5f};bound={bound:.5f};ok={sub <= bound}")
+
+    # Thm 7 (inexact)
+    for solver in ("prox_svrg", "saga"):
+        t0 = time.perf_counter()
+        res = run_minibatch_prox(stream, spec, 128, 8, solver=solver)
+        us = (time.perf_counter() - t0) * 1e6
+        sub = float(stream.population_suboptimality(res.w_avg))
+        bound = theory.rate_bound_weakly_convex(spec, 128, 8, exact=False)
+        emit(f"thm7/{solver}", us,
+             f"subopt={sub:.5f};bound={bound:.5f};ok={sub <= bound}")
+
+    # Thm 5 (strongly convex)
+    lam = 0.5
+    Xs, ys = stream.sample(jax.random.PRNGKey(1), 4096)
+    L2, beta2 = loss_constants(Xs, ys, radius=1.0, lam=lam)
+    spec_sc = theory.ProblemSpec(L=L2, beta=beta2, B=1.0, lam=lam, dim=32)
+    t0 = time.perf_counter()
+    res = run_minibatch_prox(stream, spec_sc, 64, 16, solver="exact",
+                             strongly_convex=True, lam=lam)
+    us = (time.perf_counter() - t0) * 1e6
+    Xe, ye = stream.sample(jax.random.PRNGKey(10**6), 65536)
+    H = Xe.T @ Xe / Xe.shape[0] + lam * jnp.eye(32)
+    w_opt = jnp.linalg.solve(H, Xe.T @ ye / Xe.shape[0])
+
+    def phi(w):
+        r = Xe @ w - ye
+        return 0.5 * jnp.mean(r * r) + 0.5 * lam * jnp.dot(w, w)
+
+    sub = float(phi(res.w_avg) - phi(w_opt))
+    bound = theory.rate_bound_strongly_convex(spec_sc, 64, 16)
+    emit("thm5/strongly_convex", us,
+         f"subopt={sub:.6f};bound={bound:.6f};ok={sub <= bound}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Roofline report: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+roofline table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return
+    for rec in cells:
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            emit(f"roofline/{cell}", 0.0, "skipped=" + rec["reason"][:40])
+            continue
+        if rec["status"] != "ok":
+            emit(f"roofline/{cell}", 0.0, "ERROR")
+            continue
+        r = rec["roofline"]
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        emit(f"roofline/{cell}", step_us,
+             f"bottleneck={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f};"
+             f"useful_ratio={r['useful_ratio']:.3f};"
+             f"fits16gb={rec['memory']['fits_16gb']}")
+
+
+def markdown_table(mesh="single"):
+    """Baseline table for EXPERIMENTS.md (one canonical variant per cell:
+    'mbprox' for train, 'serve' for inference; opt/baseline variants are
+    §Perf material)."""
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | MODEL_FLOPS | useful ratio | MFU bound | mem/dev "
+            "(adj GB) |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(mesh):
+        if rec.get("variant") not in ("mbprox", "serve"):
+            continue
+        if rec["status"] == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped (full attention @500k) | — | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        # clamp: adjusted residency can't be below declared args+outputs
+        floor = round((m.get("argument_size_in_bytes", 0)
+                       + m.get("output_size_in_bytes", 0)
+                       - m.get("alias_size_in_bytes", 0)) / 1024**3, 2)
+        adj = max(m.get("tpu_adjusted_total_gb", m.get("total_gb")), floor)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.3f} | {r['mfu_bound']:.3f} | {adj} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

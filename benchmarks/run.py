@@ -1,0 +1,25 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (appendix_e_logistic, fig3_convergence,
+                            fig_tradeoff, kernels_bench, rates, roofline,
+                            table1_resources)
+    table1_resources.run()
+    fig_tradeoff.run()
+    fig3_convergence.run()
+    rates.run()
+    appendix_e_logistic.run()
+    kernels_bench.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Figure 1 / Figure 2 reproduction: the communication-memory tradeoff.
+
+Sweeps the per-machine minibatch size b at FIXED sample budget n = b*m*T and
+shows that (i) statistical error stays flat (Thm 7: any b works), while
+(ii) communication falls and memory rises linearly in b — the paper's
+central tradeoff. Also shows minibatch SGD degrading at large b (Fig. 3).
+
+    PYTHONPATH=src python examples/convex_tradeoff.py
+"""
+import jax
+
+from repro.core import theory
+from repro.core.baselines import run_minibatch_sgd
+from repro.core.losses import loss_constants
+from repro.core.mp_dane import run_mp_dane
+from repro.data.synthetic import LeastSquaresStream
+
+
+def main():
+    stream = LeastSquaresStream(dim=32, noise=0.1, seed=0)
+    X, y = stream.sample(jax.random.PRNGKey(1), 8192)
+    L, beta = loss_constants(X, y, radius=1.0)
+    spec = theory.ProblemSpec(L=L, beta=beta, B=1.0, dim=32)
+    m, n_local = 4, 2048           # fixed per-machine sample budget
+
+    print(f"{'b':>6s} {'T':>5s} {'MP subopt':>11s} {'SGD subopt':>11s} "
+          f"{'MP comm':>8s} {'MP mem':>7s}")
+    for b in [32, 128, 512, 2048]:
+        T = n_local // b
+        mp = run_mp_dane(stream, spec, m, b, T, local_solver="exact")
+        sgd = run_minibatch_sgd(stream, spec, m, b, T)
+        sub_mp = float(stream.population_suboptimality(mp.w_avg))
+        sub_sgd = float(stream.population_suboptimality(sgd.w_avg))
+        print(f"{b:6d} {T:5d} {sub_mp:11.5f} {sub_sgd:11.5f} "
+              f"{mp.ledger.comm_rounds:8d} "
+              f"{mp.ledger.peak_memory_vectors:7d}")
+    print("\nMP error is flat in b (Thm 7); SGD degrades once bm >> sqrt(n);"
+          "\nMP communication falls ~1/b while memory grows ~b (Fig. 1).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Fault-tolerant pytree checkpointing: msgpack + zstd, atomic rename,
+manifest with integrity hashes, restore-latest, async save thread.
+
+Minibatch-prox makes checkpointing cheap (DESIGN.md §6): training state is
+(params, anchor/opt, step, rng) ONLY — minibatches are redrawn from the
+seeded stream, so no data-pipeline state needs recovery.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _encode(leaves) -> bytes:
+    payload = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        # bf16 has no numpy dtype string; view as uint16
+        if arr.dtype == jnp.bfloat16:
+            payload.append({"dtype": "bfloat16", "shape": arr.shape,
+                            "data": arr.view(np.uint16).tobytes()})
+        else:
+            payload.append({"dtype": str(arr.dtype), "shape": arr.shape,
+                            "data": arr.tobytes()})
+    raw = msgpack.packb(payload, use_bin_type=True)
+    return zstandard.ZstdCompressor(level=3).compress(raw)
+
+
+def _decode(blob: bytes):
+    raw = zstandard.ZstdDecompressor().decompress(blob)
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves = []
+    for item in payload:
+        if item["dtype"] == "bfloat16":
+            arr = np.frombuffer(item["data"], np.uint16).reshape(
+                item["shape"]).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(item["data"],
+                                np.dtype(item["dtype"])).reshape(
+                item["shape"])
+        leaves.append(jnp.asarray(arr))
+    return leaves
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic checkpoint write; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    blob = _encode(leaves)
+    digest = hashlib.sha256(blob).hexdigest()
+    name = f"ckpt_{step:010d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name + ".ckpt")
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)  # atomic on POSIX
+    manifest = {"step": step, "sha256": digest, "time": time.time(),
+                "treedef": str(treedef), "file": name + ".ckpt"}
+    mtmp = os.path.join(ckpt_dir, "manifest.tmp")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.rename(mtmp, os.path.join(ckpt_dir, "manifest.json"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    ckpts = sorted(f for f in os.listdir(ckpt_dir) if f.endswith(".ckpt"))
+    for f in ckpts[:-keep]:
+        try:
+            os.remove(os.path.join(ckpt_dir, f))
+        except OSError:
+            pass
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)["step"]
+
+
+def restore(ckpt_dir: str, tree_like):
+    """Restore the latest checkpoint into the structure of `tree_like`.
+    Verifies the manifest hash. Returns (tree, step) or (None, None)."""
+    path = os.path.join(ckpt_dir, "manifest.json")
+    if not os.path.exists(path):
+        return None, None
+    with open(path) as f:
+        manifest = json.load(f)
+    blob_path = os.path.join(ckpt_dir, manifest["file"])
+    with open(blob_path, "rb") as f:
+        blob = f.read()
+    if hashlib.sha256(blob).hexdigest() != manifest["sha256"]:
+        raise IOError(f"checkpoint {blob_path} failed integrity check")
+    leaves = _decode(blob)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training (one in flight)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        # device_get before handing to the thread (donations may invalidate)
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,20 @@
+"""codeqwen1.5-7b — qwen1.5-arch dense [hf:Qwen/CodeQwen1.5-7B].
+
+32L d_model=4096 32H (MHA kv=32) d_ff=13440 vocab=92416.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab_size=92416,
+    block_pattern=("attn",),
+    mlp_kind="swiglu",
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,8 @@
+"""repro.core — the paper's contribution: minibatch-prox distributed
+stochastic optimization (MP-DSVRG / MP-DANE) and the baselines it is
+analyzed against."""
+from repro.core import losses, prox, solvers, theory  # noqa: F401
+from repro.core.accounting import Ledger  # noqa: F401
+from repro.core.minibatch_prox import run_minibatch_prox  # noqa: F401
+from repro.core.mp_dane import run_mp_dane  # noqa: F401
+from repro.core.mp_dsvrg import run_mp_dsvrg  # noqa: F401

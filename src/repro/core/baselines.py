@@ -1,0 +1,202 @@
+"""Baselines the paper compares against (Table 1 / Figure 2 / Figure 3).
+
+  - minibatch_sgd:        distributed minibatch SGD (Dekel et al. 2012)
+  - acc_minibatch_sgd:    accelerated minibatch SGD, AC-SA form
+                          (Cotter et al. 2011 / Ghadimi & Lan)
+  - single_sgd:           single-machine SGD (statistical reference)
+  - dsvrg_erm:            DSVRG on the regularized ERM objective (eq. 2)
+                          (Lee et al. 2015; the paper's Section 2)
+  - emso:                 one-shot-averaged local prox solves (Li et al. 2014)
+                          = MP-DANE with correction disabled, K=R=1
+
+All distributed baselines use the same vmap/shard_map 'machines'-axis SPMD
+formulation as mp_dsvrg/mp_dane, and thread the same accounting Ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import prox, theory
+from repro.core.accounting import Ledger
+from repro.core.losses import least_squares
+from repro.core.mp_dane import run_mp_dane
+from repro.core.mp_dsvrg import _dsvrg_inner_spmd
+
+AXIS = "machines"
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    w_avg: jnp.ndarray
+    w_last: jnp.ndarray
+    ledger: Ledger
+
+
+# ----------------------------------------------------------------------------
+# Minibatch SGD: w_t = P( w_{t-1} - (1/gamma_t) grad phi_{I_t}(w_{t-1}) )
+# ----------------------------------------------------------------------------
+
+def run_minibatch_sgd(stream, spec: theory.ProblemSpec, m: int, b: int,
+                      T: int, *, gamma: Optional[float] = None,
+                      radius: float = float("inf"), seed: int = 0,
+                      loss=None) -> BaselineResult:
+    """Prop. 13 tuning: gamma = beta + sqrt(4T/(bm)) L / B (bm = total batch)."""
+    bm = b * m
+    if gamma is None:
+        gamma = spec.beta + (4.0 * T / bm) ** 0.5 * spec.L / spec.B
+    ledger = Ledger()
+    ledger.hold(1)
+
+    @jax.jit
+    def step(w, Xm, ym):
+        def local(X, y):
+            if loss is None:
+                g = X.T @ (X @ w - y) / X.shape[0]
+            else:
+                g = jax.vmap(loss.per_example_grad,
+                             (None, 0, 0))(w, X, y).mean(0)
+            return lax.pmean(g, AXIS)
+        g = jax.vmap(local, axis_name=AXIS)(Xm, ym)[0]
+        w_new = w - g / gamma
+        if radius != float("inf"):
+            w_new = prox.project_l2_ball(w_new, radius)
+        return w_new
+
+    key = jax.random.PRNGKey(seed)
+    w = jnp.zeros(stream.dim)
+    acc = jnp.zeros(stream.dim)
+    for _ in range(T):
+        key, kd = jax.random.split(key)
+        Xm, ym = stream.sample_distributed(kd, m, b)
+        w = step(w, Xm, ym)
+        acc = acc + w
+        ledger.communicate(vectors=1, rounds=1)
+        ledger.compute(b)
+    return BaselineResult(w_avg=acc / T, w_last=w, ledger=ledger)
+
+
+# ----------------------------------------------------------------------------
+# Accelerated minibatch SGD (AC-SA two-sequence scheme)
+# ----------------------------------------------------------------------------
+
+def run_acc_minibatch_sgd(stream, spec: theory.ProblemSpec, m: int, b: int,
+                          T: int, *, radius: float = float("inf"),
+                          seed: int = 0, step_scale: float = 1.0
+                          ) -> BaselineResult:
+    """AC-SA (Ghadimi & Lan): alpha_t = 2/(t+1),
+    lambda_t = t/2 * min(1/(2 beta), B sqrt(bm) / (2 L T^{3/2}))."""
+    bm = b * m
+    base = min(1.0 / (2.0 * spec.beta),
+               step_scale * spec.B * (bm ** 0.5) / (2.0 * spec.L * T ** 1.5))
+    ledger = Ledger()
+    ledger.hold(2)
+
+    @jax.jit
+    def step(carry, Xm, ym, t):
+        w, w_ag = carry
+        alpha = 2.0 / (t + 1.0)
+        lam_t = 0.5 * t * base
+        w_md = (1 - alpha) * w_ag + alpha * w
+
+        def local(X, y):
+            g = X.T @ (X @ w_md - y) / X.shape[0]
+            return lax.pmean(g, AXIS)
+        g = jax.vmap(local, axis_name=AXIS)(Xm, ym)[0]
+        w_new = w - lam_t * g
+        if radius != float("inf"):
+            w_new = prox.project_l2_ball(w_new, radius)
+        w_ag_new = (1 - alpha) * w_ag + alpha * w_new
+        return (w_new, w_ag_new)
+
+    key = jax.random.PRNGKey(seed)
+    w = jnp.zeros(stream.dim)
+    w_ag = jnp.zeros(stream.dim)
+    for t in range(1, T + 1):
+        key, kd = jax.random.split(key)
+        Xm, ym = stream.sample_distributed(kd, m, b)
+        w, w_ag = step((w, w_ag), Xm, ym, float(t))
+        ledger.communicate(vectors=1, rounds=1)
+        ledger.compute(b)
+    return BaselineResult(w_avg=w_ag, w_last=w, ledger=ledger)
+
+
+# ----------------------------------------------------------------------------
+# Single-machine SGD (sample-optimal reference)
+# ----------------------------------------------------------------------------
+
+def run_single_sgd(stream, spec: theory.ProblemSpec, n: int, *,
+                   radius: float = float("inf"), seed: int = 0
+                   ) -> BaselineResult:
+    key = jax.random.PRNGKey(seed)
+    X, y = stream.sample(key, n)
+    etas = spec.B / (spec.L * jnp.sqrt(jnp.arange(1, n + 1, dtype=jnp.float32)))
+
+    @jax.jit
+    def run(w0):
+        def step(carry, xi):
+            w, acc = carry
+            xv, yv, eta = xi
+            g = (jnp.dot(w, xv) - yv) * xv
+            w_new = w - eta * g
+            if radius != float("inf"):
+                w_new = prox.project_l2_ball(w_new, radius)
+            return (w_new, acc + w_new), None
+        (w, acc), _ = lax.scan(step, (w0, jnp.zeros_like(w0)), (X, y, etas))
+        return acc / n, w
+
+    w_avg, w_last = run(jnp.zeros(stream.dim))
+    ledger = Ledger()
+    ledger.compute(n)
+    ledger.hold(1)
+    return BaselineResult(w_avg=w_avg, w_last=w_last, ledger=ledger)
+
+
+# ----------------------------------------------------------------------------
+# DSVRG on regularized ERM (Section 2): fixed dataset, nu = L/(B sqrt(n))
+# ----------------------------------------------------------------------------
+
+def run_dsvrg_erm(stream, spec: theory.ProblemSpec, m: int, n: int, *,
+                  K: Optional[int] = None, eta_scale: float = 0.3,
+                  seed: int = 0) -> BaselineResult:
+    """Solves min_w phi_S(w) + nu/2 ||w||^2 on a stored dataset of n samples."""
+    nu = spec.L / (spec.B * n ** 0.5)
+    b_loc = n // m
+    K = K if K is not None else max(1, int(jnp.log(jnp.asarray(float(n)))))
+    key = jax.random.PRNGKey(seed)
+    Xm, ym = stream.sample_distributed(key, m, b_loc)
+    gamma_eff = nu  # ridge acts like the prox term with anchor 0
+    eta = eta_scale / (spec.beta + gamma_eff)
+    loss = least_squares()
+
+    @jax.jit
+    def solve(w0):
+        inner = jax.vmap(
+            lambda X, y: _dsvrg_inner_spmd(
+                loss, jnp.zeros_like(w0), w0, X, y, gamma_eff, eta,
+                p=1, K=K, m=m, lam=0.0),
+            axis_name=AXIS)
+        z, _ = inner(Xm, ym)
+        return z[0]
+
+    w = solve(jnp.zeros(stream.dim))
+    ledger = Ledger()
+    ledger.hold(b_loc)                      # must store the local shard
+    ledger.communicate(vectors=2 * K, rounds=2 * K)
+    ledger.compute(K * (b_loc + b_loc))
+    return BaselineResult(w_avg=w, w_last=w, ledger=ledger)
+
+
+# ----------------------------------------------------------------------------
+# EMSO: one-shot averaging of local exact prox solves (Li et al. 2014)
+# ----------------------------------------------------------------------------
+
+def run_emso(stream, spec: theory.ProblemSpec, m: int, b: int, T: int,
+             *, gamma: Optional[float] = None, seed: int = 0):
+    return run_mp_dane(stream, spec, m, b, T, K=1, R=1, kappa=0.0,
+                       gamma=gamma, local_solver="exact", correction=False,
+                       seed=seed)

@@ -1,0 +1,134 @@
+"""Convex instantaneous losses for distributed stochastic optimization.
+
+The paper's analysis is for least squares ``l(w, xi) = 0.5 (w^T x - y)^2``
+(optionally ridge-regularized to make it strongly convex); the algorithms apply
+to any convex loss, so we also provide logistic loss for the App. E experiments.
+
+Every loss exposes:
+  value(w, X, y)      mean loss over the batch           (phi_I)
+  grad(w, X, y)       mean gradient over the batch       (nabla phi_I)
+  per_example_grad    gradient of one example            (for SVRG/SAGA inner loops)
+  constants(X, ...)   (L, beta, lam) Lipschitz / smoothness / strong-convexity
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """A convex instantaneous loss phi(w; x, y) with known constants."""
+
+    name: str
+    value_fn: callable
+    grad_fn: callable
+    lam: float = 0.0  # strong convexity of the *instantaneous* loss
+
+    def value(self, w, X, y):
+        """Mean loss over a batch. X: (n, d), y: (n,)."""
+        return jnp.mean(jax.vmap(self.value_fn, in_axes=(None, 0, 0))(w, X, y))
+
+    def grad(self, w, X, y):
+        """Mean gradient over a batch (one vector op per example)."""
+        return jnp.mean(
+            jax.vmap(self.grad_fn, in_axes=(None, 0, 0))(w, X, y), axis=0
+        )
+
+    def per_example_grad(self, w, x, y):
+        return self.grad_fn(w, x, y)
+
+
+# --------------------------------------------------------------------------
+# Least squares:  l(w, (x,y)) = 0.5 (w.x - y)^2
+# --------------------------------------------------------------------------
+
+def _lsq_value(w, x, y):
+    r = jnp.dot(w, x) - y
+    return 0.5 * r * r
+
+
+def _lsq_grad(w, x, y):
+    return (jnp.dot(w, x) - y) * x
+
+
+def least_squares() -> Loss:
+    return Loss("least_squares", _lsq_value, _lsq_grad, lam=0.0)
+
+
+# --------------------------------------------------------------------------
+# Ridge-regularized least squares: strongly convex instantaneous loss
+#   l(w, xi) = 0.5 (w.x - y)^2 + lam/2 ||w||^2
+# --------------------------------------------------------------------------
+
+def ridge_least_squares(lam: float) -> Loss:
+    def value(w, x, y):
+        return _lsq_value(w, x, y) + 0.5 * lam * jnp.dot(w, w)
+
+    def grad(w, x, y):
+        return _lsq_grad(w, x, y) + lam * w
+
+    return Loss("ridge_least_squares", value, grad, lam=lam)
+
+
+# --------------------------------------------------------------------------
+# Logistic loss (App. E classification experiments): y in {-1, +1}
+# --------------------------------------------------------------------------
+
+def logistic() -> Loss:
+    def value(w, x, y):
+        return jnp.logaddexp(0.0, -y * jnp.dot(w, x))
+
+    def grad(w, x, y):
+        s = jax.nn.sigmoid(-y * jnp.dot(w, x))
+        return -s * y * x
+
+    return Loss("logistic", value, grad, lam=0.0)
+
+
+def logistic_ridge(lam: float) -> Loss:
+    base = logistic()
+
+    def value(w, x, y):
+        return base.value_fn(w, x, y) + 0.5 * lam * jnp.dot(w, w)
+
+    def grad(w, x, y):
+        return base.grad_fn(w, x, y) + lam * w
+
+    return Loss("logistic_ridge", value, grad, lam=lam)
+
+
+# --------------------------------------------------------------------------
+# Batched closed forms for least squares (used by exact prox + tests)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def lsq_batch_value(w, X, y):
+    r = X @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+@partial(jax.jit, static_argnames=())
+def lsq_batch_grad(w, X, y):
+    n = X.shape[0]
+    return X.T @ (X @ w - y) / n
+
+
+def loss_constants(X, y=None, radius: float = None, lam: float = 0.0):
+    """Empirical (L, beta) for least squares on a reference sample.
+
+    beta = max_i ||x_i||^2 (per-example smoothness),
+    L    = max_i ||x_i|| * (radius * ||x_i|| + |y_i|)  (Lipschitz over the ball
+           of radius `radius`); the paper assumes L, beta = O(1).
+    """
+    norms = jnp.linalg.norm(X, axis=1)
+    beta = jnp.max(norms**2) + lam
+    if radius is None:
+        radius = 1.0
+    if y is None:
+        y = jnp.zeros(X.shape[0])
+    L = jnp.max(norms * (radius * norms + jnp.abs(y))) + lam * radius
+    return float(L), float(beta)

@@ -1,0 +1,149 @@
+"""MP-DSVRG — Algorithm 1: minibatch-prox with distributed SVRG inner solver.
+
+SPMD formulation. The per-machine program `_dsvrg_inner_spmd` is written once
+against a named machine axis and executed either
+
+  - under `jax.vmap(axis_name=...)` — exact m-machine semantics on one host
+    (used by tests/benchmarks on CPU), or
+  - under `jax.shard_map` on a real mesh axis (used at scale) — identical code.
+
+Fidelity notes vs. the paper's pseudo-code:
+  * Step 1 (global gradient at z_{k-1}) is `lax.pmean` over machines — one
+    all-reduce round, exactly the paper's communication.
+  * Step 2 prescribes that a *single* designated machine j runs the
+    without-replacement VR pass. In SPMD every machine runs the pass on its
+    own local batch and the designated machine's result is selected via
+    mask+psum — numerically identical to machine j computing alone, at the
+    cost of (algorithmically idle) duplicate compute on other machines. The
+    accounting ledger counts the *algorithm's* cost model (Table 1), i.e. the
+    designated machine's ops; the roofline of the TPU mapping is analysed
+    separately (EXPERIMENTS.md §Roofline discusses why MP-DANE is the
+    TPU-native variant).
+  * Step 3 broadcast of z_k is the same psum (results replicated). We carry
+    the running SVRG iterate x alongside z so the hand-off between designated
+    machines is well-defined (the paper leaves the x hand-off implicit).
+  * z_k is the average over the pass iterates x_0..x_{|B|} (|B|+1 terms; the
+    paper's normalization 1/|B| over |B|+1 terms is treated as a typo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import theory
+from repro.core.accounting import Ledger
+from repro.core.losses import Loss, least_squares
+
+AXIS = "machines"
+
+
+def _dsvrg_inner_spmd(loss: Loss, w_prev, x_init, X_loc, y_loc,
+                      gamma, eta, p: int, K: int, m: int, lam: float,
+                      axis: str = AXIS):
+    """K inner DSVRG iterations for the prox subproblem. Per-machine program.
+
+    X_loc: (b, d) local minibatch; splits into p batches of size b//p.
+    Returns (z_K, x_last).
+    """
+    machine_id = lax.axis_index(axis)
+    b, d = X_loc.shape
+    batch = b // p
+    Xb = X_loc[: p * batch].reshape(p, batch, d)
+    yb = y_loc[: p * batch].reshape(p, batch)
+
+    def local_grad(w):
+        return (X_loc.T @ (X_loc @ w - y_loc)) / b + lam * w
+
+    def inner(carry, k):
+        z, x = carry
+        # -- step 1: one all-reduce for the exact minibatch gradient at z --
+        mu = lax.pmean(local_grad(z), axis)
+        # -- step 2: designated machine j runs the VR pass on batch s --
+        j = (k // p) % m
+        s = k % p
+
+        def pass_step(cx, xi):
+            xv, acc = cx
+            xs, ys = xi
+            g = (loss.per_example_grad(xv, xs, ys)
+                 - loss.per_example_grad(z, xs, ys)
+                 + mu + gamma * (xv - w_prev))
+            x_new = xv - eta * g
+            return (x_new, acc + x_new), None
+
+        (x_last, acc), _ = lax.scan(pass_step, (x, x), (Xb[s], yb[s]))
+        z_cand = acc / (batch + 1)
+        # -- step 3: select machine j's result and broadcast (one psum) --
+        mask = (machine_id == j).astype(z.dtype)
+        z_new = lax.psum(mask * z_cand, axis)
+        x_new = lax.psum(mask * x_last, axis)
+        return (z_new, x_new), None
+
+    (z, x), _ = lax.scan(inner, (w_prev, x_init), jnp.arange(K))
+    return z, x
+
+
+@dataclasses.dataclass
+class MPDSVRGResult:
+    w_avg: jnp.ndarray
+    w_last: jnp.ndarray
+    iterates: jnp.ndarray
+    plan: theory.MPDSVRGPlan
+    ledger: Ledger
+
+
+def run_mp_dsvrg(stream, spec: theory.ProblemSpec, m: int, b: int, T: int,
+                 *, K: Optional[int] = None, p: Optional[int] = None,
+                 gamma: Optional[float] = None, eta_scale: float = 0.3,
+                 lam: float = 0.0, seed: int = 0,
+                 loss: Optional[Loss] = None) -> MPDSVRGResult:
+    """Run Algorithm 1 for T outer iterations, m machines, b samples/machine.
+
+    Parameters default to the Theorem-10 plan computed from (spec, n=bmT).
+    """
+    n = b * m * T
+    plan = theory.mp_dsvrg_plan(spec, n, m, b)
+    K = K if K is not None else plan.K
+    p = p if p is not None else plan.p
+    p = max(1, min(p, b))
+    gamma = gamma if gamma is not None else plan.gamma
+    plan = dataclasses.replace(plan, T=T, K=K, p=p, gamma=gamma,
+                               batch=b // p)
+    eta = eta_scale / (spec.beta + gamma + lam)
+    loss = loss or least_squares()
+
+    ledger = Ledger()
+    ledger.hold(b)
+
+    inner = partial(_dsvrg_inner_spmd, loss, gamma=gamma, eta=eta,
+                    p=p, K=K, m=m, lam=lam)
+
+    @jax.jit
+    def outer_step(w_prev, Xm, ym):
+        spmd = jax.vmap(lambda X, y: inner(w_prev, w_prev, X, y),
+                        axis_name=AXIS)
+        z, _ = spmd(Xm, ym)
+        return z[0]  # replicated across machines
+
+    key = jax.random.PRNGKey(seed)
+    w = jnp.zeros(stream.dim)
+    iterates = []
+    for _ in range(T):
+        key, kd = jax.random.split(key)
+        Xm, ym = stream.sample_distributed(kd, m, b)
+        w = outer_step(w, Xm, ym)
+        iterates.append(w)
+        # accounting per Algorithm 1: K inner iters x 2 rounds (grad + bcast)
+        ledger.communicate(vectors=2 * K, rounds=2 * K)
+        # per machine: local gradient O(b) per inner iter; the designated
+        # machine additionally runs b/p stochastic updates
+        ledger.compute(K * (b + b // p))
+
+    iterates = jnp.stack(iterates)
+    return MPDSVRGResult(w_avg=iterates.mean(0), w_last=w,
+                         iterates=iterates, plan=plan, ledger=ledger)

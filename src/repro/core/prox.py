@@ -1,0 +1,71 @@
+"""Proximal operators for minibatch-prox.
+
+The minibatch-prox iterate (paper eq. (3)) is
+
+    w_t = argmin_{w in Omega}  phi_{I_t}(w) + (gamma_t / 2) ||w - w_{t-1}||^2 .
+
+For least squares this subproblem is a d x d linear solve (the "exact" oracle
+used by Theorems 4/5 and the correctness oracles of every inexact solver):
+
+    (X^T X / b + (lam + gamma) I) w = X^T y / b + gamma w_prev   [+ ridge]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_lsq_prox(w_prev, X, y, gamma: float, lam: float = 0.0):
+    """Closed-form minimizer of the least-squares minibatch-prox subproblem.
+
+    Supports X of shape (b, d) or stacked machines (m, b, d) — the stacked form
+    solves the *union* minibatch subproblem (eq. 12) exactly.
+    """
+    if X.ndim == 3:
+        m, b, d = X.shape
+        X = X.reshape(m * b, d)
+        y = y.reshape(m * b)
+    b, d = X.shape
+    H = X.T @ X / b + (lam + gamma) * jnp.eye(d, dtype=X.dtype)
+    rhs = X.T @ y / b + gamma * w_prev
+    return jnp.linalg.solve(H, rhs)
+
+
+def prox_subproblem_value(w, w_prev, X, y, gamma: float, lam: float = 0.0):
+    """f_t(w) = phi_{I_t}(w) + gamma/2 ||w - w_prev||^2 (least squares)."""
+    if X.ndim == 3:
+        X = X.reshape(-1, X.shape[-1])
+        y = y.reshape(-1)
+    r = X @ w - y
+    reg = 0.5 * lam * jnp.dot(w, w)
+    return 0.5 * jnp.mean(r * r) + reg + 0.5 * gamma * jnp.sum((w - w_prev) ** 2)
+
+
+def prox_subproblem_grad(w, w_prev, X, y, gamma: float, lam: float = 0.0):
+    if X.ndim == 3:
+        X = X.reshape(-1, X.shape[-1])
+        y = y.reshape(-1)
+    n = X.shape[0]
+    return X.T @ (X @ w - y) / n + lam * w + gamma * (w - w_prev)
+
+
+def project_l2_ball(w, radius: float):
+    """P_Omega for Omega = {w : ||w|| <= radius}. radius=inf => identity."""
+    norm = jnp.linalg.norm(w)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
+    return w * scale
+
+
+def sgd_equivalence_residual(w_t, w_prev, X, y, gamma: float, lam: float = 0.0):
+    """Residual of the implicit-gradient characterization (paper eq. (5)):
+
+        w_t = w_{t-1} - (1/gamma) grad phi_{I_t}(w_t)        (unconstrained)
+
+    Zero iff w_t is the exact prox point. Used by property tests.
+    """
+    if X.ndim == 3:
+        X = X.reshape(-1, X.shape[-1])
+        y = y.reshape(-1)
+    n = X.shape[0]
+    g = X.T @ (X @ w_t - y) / n + lam * w_t
+    return w_t - (w_prev - g / gamma)

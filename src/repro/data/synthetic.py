@@ -1,0 +1,93 @@
+"""Seeded synthetic data streams.
+
+The paper's setting is *stochastic* optimization: examples arrive from an
+unknown distribution D one at a time ("a button generating examples"). We model
+this with stateless seeded generators so that (a) any machine can draw its own
+minibatch independently, (b) restarts regenerate identical streams, and (c) no
+dataset ever needs to be stored (the paper's memory model).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastSquaresStream:
+    """y = x . w_star + noise, x ~ N(0, Sigma) with decaying spectrum.
+
+    Conditioning is controlled by `decay`: eigenvalues lam_j ~ j^{-decay}.
+    Feature norm is scaled so beta = max ||x||^2 = O(1).
+    """
+
+    dim: int
+    noise: float = 0.1
+    decay: float = 0.5
+    seed: int = 0
+
+    def _spectrum(self):
+        j = np.arange(1, self.dim + 1, dtype=np.float64)
+        lam = j ** (-self.decay)
+        lam = lam / lam.sum() * self.dim  # trace = d
+        return jnp.asarray(np.sqrt(lam), dtype=jnp.float32)
+
+    def w_star(self):
+        key = jax.random.PRNGKey(self.seed)
+        w = jax.random.normal(key, (self.dim,))
+        return w / jnp.linalg.norm(w)
+
+    def sample(self, key, n: int):
+        """Draw n fresh examples. Returns X: (n, d), y: (n,)."""
+        kx, kn = jax.random.split(key)
+        scale = self._spectrum()
+        X = jax.random.normal(kx, (n, self.dim)) * scale / jnp.sqrt(self.dim)
+        y = X @ self.w_star() + self.noise * jax.random.normal(kn, (n,))
+        return X, y
+
+    def sample_distributed(self, key, m: int, b: int):
+        """Each of m machines draws b examples: X (m, b, d), y (m, b)."""
+        X, y = self.sample(key, m * b)
+        return X.reshape(m, b, self.dim), y.reshape(m, b)
+
+    def population_objective(self, w, n_eval: int = 65536, seed: int = 10**6):
+        """Monte-Carlo estimate of phi(w) on a fresh evaluation sample."""
+        X, y = self.sample(jax.random.PRNGKey(seed), n_eval)
+        r = X @ w - y
+        return 0.5 * jnp.mean(r * r)
+
+    def population_suboptimality(self, w, n_eval: int = 65536):
+        """phi(w) - phi(w_star_emp) with a shared eval set (variance-reduced)."""
+        X, y = self.sample(jax.random.PRNGKey(10**6), n_eval)
+        # Population optimum of the noisy model is w_star itself.
+        r = X @ w - y
+        r_star = X @ self.w_star() - y
+        return 0.5 * jnp.mean(r * r) - 0.5 * jnp.mean(r_star * r_star)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """Deterministic synthetic token stream for LM training/serving tests.
+
+    Produces (tokens, targets) with a learnable structure: targets are a fixed
+    permutation-shift of tokens so tiny models can overfit it, which the smoke
+    and integration tests use to check that training reduces loss.
+    """
+
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, key, batch_size: int):
+        toks = jax.random.randint(
+            key, (batch_size, self.seq_len + 1), 0, self.vocab_size
+        )
+        # next-token structure: x_{t+1} = (x_t * 31 + 7) % V on half of positions
+        det = (toks[:, :-1] * 31 + 7) % self.vocab_size
+        mix = jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                   0.5, det.shape)
+        inputs = toks[:, :-1]
+        targets = jnp.where(mix, det, toks[:, 1:])
+        return inputs, targets

@@ -1,0 +1,64 @@
+"""Process-global sharding context for in-loop constraints.
+
+GSPMD reshards scan inputs at the loop boundary: if a scanned-over stacked
+weight needs gathering (FSDP), the all-gather of the WHOLE stack is hoisted
+out of the while loop — a 12-48 GB temp for the big archs. Pinning the sliced
+per-layer weights to their sharded spec INSIDE the loop body forces
+partial-matmul + psum instead (2D tensor parallelism), keeping memory flat.
+
+The launcher/dry-run sets the spec tree here before tracing; model code picks
+it up inside the scan bodies. None (default) = no constraints (single-device
+tests, examples).
+"""
+from __future__ import annotations
+
+_INLOOP_SPECS = None   # {'p0': spec-tree-for-sliced-block-params, ...}
+_ACT_SPEC = None       # PartitionSpec for (B, S, D) activations
+
+
+def set_inloop_specs(specs) -> None:
+    global _INLOOP_SPECS
+    _INLOOP_SPECS = specs
+
+
+def get_inloop_specs():
+    return _INLOOP_SPECS
+
+
+_MOE_GATHER_SPECS = None  # spec tree for gathered (data-unsharded) experts
+_MOE_XE_SPEC = None       # sharding for routed expert inputs (g, E, C, D)
+
+
+def set_moe_xe_spec(spec) -> None:
+    global _MOE_XE_SPEC
+    _MOE_XE_SPEC = spec
+
+
+def get_moe_xe_spec():
+    return _MOE_XE_SPEC
+
+
+def set_moe_gather_specs(specs) -> None:
+    """Pin MoE expert weights to their gathered (model-only) sharding at
+    the moe_block entry — ONE FSDP all-gather per layer visit, hoisted out
+    of the sequence-chunk loop (which would otherwise re-gather per chunk:
+    measured 6.6 TB/step on grok-1)."""
+    global _MOE_GATHER_SPECS
+    _MOE_GATHER_SPECS = specs
+
+
+def get_moe_gather_specs():
+    return _MOE_GATHER_SPECS
+
+
+def set_activation_spec(spec) -> None:
+    """Pin (B, S, D) activations to batch-over-data inside every layer —
+    without this, FSDP weight shardings (feature dims over 'data') win the
+    GSPMD propagation fight and REPLICATE the batch (observed on grok-1:
+    activations showed the full global batch per device)."""
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def get_activation_spec():
+    return _ACT_SPEC

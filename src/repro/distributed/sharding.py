@@ -1,0 +1,243 @@
+"""PartitionSpec rules per architecture: TP over 'model', optional FSDP over
+'data', EP for divisible expert counts, batch over ('pod','data').
+
+Rules are name-based over the param pytree paths produced by models/lm.py.
+Stacked superblock leaves get a leading None. GSPMD uneven-sharding padding
+covers head counts not divisible by the 16-way model axis (llama4 40H,
+smollm 9H, recurrentgemma 10H, paligemma 8H) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Archs whose params+opt do not fit replicated over the data axis: FSDP.
+FSDP_ARCHS = {"llama4-maverick-400b-a17b", "grok-1-314b"}
+
+
+def needs_fsdp(cfg) -> bool:
+    return cfg.name in FSDP_ARCHS
+
+
+def _rule(path_names, leaf, cfg, fsdp: bool, model_axis="model",
+          fsdp_axis="data"):
+    """PartitionSpec for one leaf, EXCLUDING the stacked n_super axis."""
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+    M, F = model_axis, (fsdp_axis if fsdp else None)
+
+    if name == "embed":
+        # vocab over model only — FSDP'ing D over 'data' lets the feature
+        # sharding hijack the data axis from the batch (GSPMD propagation)
+        if cfg.frontend == "audio":
+            return P(None, M, None)
+        return P(M, None)
+    if name == "head":
+        return P(None, M)
+    if parent == "vision":
+        return P(None, None)
+
+    # attention projections
+    if name in ("wq", "wk", "wv"):
+        return P(F, M)
+    if name == "wo":
+        return P(M, F)
+
+    # dense MLP
+    if parent == "mlp" or parent == "cmix":
+        if name in ("w_gate", "w_up", "w_k"):
+            return P(F, M)
+        if name in ("w_down", "w_v"):
+            return P(M, F)
+        if name == "w_r":
+            return P(F, M)
+        if name == "mix":
+            return P(None, None)
+
+    # MoE experts: EP over 'model' when the expert count divides (llama4),
+    # else d_ff over 'model' (grok); FSDP storage over 'data' for the >10B
+    # archs with an explicit ONCE-PER-LAYER gather hoisted out of the
+    # sequence-chunk loop (models/moe.py; §Perf iterations 4-5 — sharding
+    # d_ff over 'data' instead conflicts with batch-over-data and made
+    # GSPMD all-gather the dispatch tensors: 15 TB/step).
+    if parent == "moe":
+        ep = cfg.n_experts % 16 == 0
+        if name == "router":
+            return P(None, None)
+        if name in ("w_gate", "w_up"):
+            return P(M, F, None) if ep else P(None, F, M)
+        if name == "w_down":
+            return P(M, None, F) if ep else P(None, M, F)
+
+    # RWKV time-mix
+    if parent == "tmix":
+        if name in ("w_r", "w_k", "w_v", "w_g"):
+            return P(F, M)
+        if name == "w_o":
+            return P(M, F)
+        if name == "decay_A":
+            return P(None, None)
+        if name == "decay_B":
+            return P(None, M)
+        if name in ("decay_base", "ln_scale"):
+            return P(M)
+        if name == "bonus_u":
+            return P(None, M)  # (H, hd): H often not 16-divisible; hd is
+        if name == "mix":
+            return P(None, None)
+
+    # RG-LRU
+    if parent == "rec":
+        if name in ("w_in_rec", "w_in_gate"):
+            return P(F, M)
+        if name in ("w_a", "w_x"):
+            return P(None, M)
+        if name == "conv_w":
+            return P(None, M)
+        if name in ("conv_b", "b_a", "b_x", "log_lambda"):
+            return P(M)
+        if name == "w_out":
+            return P(M, F)
+
+    # norms, scalars, counters
+    return P(*([None] * leaf.ndim))
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop axis names on dims they don't evenly divide (jit input shardings
+    require exact divisibility; compute-internal shardings may still be
+    uneven via GSPMD propagation). Tuple entries degrade to the longest
+    dividing prefix (e.g. ('data','model') -> ('data',) for batch 128 on a
+    16x16 mesh)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, tuple) else [entry]
+        while axes:
+            ways = 1
+            for a in axes:
+                ways *= sizes[a]
+            if i < len(shape) and shape[i] % ways == 0:
+                break
+            axes.pop()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def sanitize_tree(spec_tree, shape_tree, mesh):
+    return jax.tree.map(
+        lambda sp, s: sanitize_spec(sp, s.shape, mesh), spec_tree,
+        shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _path_names(path):
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(k.key)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return names
+
+
+def param_specs(params, cfg, fsdp: bool | None = None):
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs)."""
+    fsdp = needs_fsdp(cfg) if fsdp is None else fsdp
+    dp_only = getattr(cfg, "parallelism", "tp") == "dp_only"
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        stacked = "blocks" in names
+        if dp_only:
+            nd = leaf.ndim
+            return P(*([None] * nd))
+        base = _rule(names, _Unstacked(leaf, stacked), cfg, fsdp)
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+class _Unstacked:
+    """Leaf view with the stacked n_super axis removed (rank bookkeeping)."""
+
+    def __init__(self, leaf, stacked):
+        self.ndim = leaf.ndim - (1 if stacked else 0)
+
+
+def opt_state_specs(opt_state, param_spec_tree, cfg):
+    """Optimizer state mirrors params (m/v/anchor leaves) + scalar counters."""
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0:
+            return P()
+        # strip the optimizer-level prefix ('m','v','anchor','0'...) then
+        # look up the matching param leaf path
+        stacked = "blocks" in names
+        base = _rule(names, _Unstacked(leaf, stacked), cfg,
+                     fsdp=needs_fsdp(cfg))
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, opt_state)
+
+
+def batch_specs(batch, dp_axes: tuple, leading_micro: bool):
+    """Shard the batch dim over data(+pod); microbatch axis (if any) first."""
+    def spec_for(leaf):
+        if leading_micro:
+            return P(None, dp_axes)
+        return P(dp_axes)
+    return jax.tree.map(spec_for, batch)
+
+
+def decode_state_specs(state, cfg, dp_axes: tuple):
+    """KV caches / recurrent state: batch over data(+pod), KV heads over
+    'model' when divisible (else replicated over model)."""
+    # KV cache TP rule: shard KV heads over 'model' when divisible;
+    # otherwise shard the SEQUENCE dim (FlashDecoding-style context
+    # parallelism — softmax stats all-reduced, avoids the SPMD involuntary
+    # replication seen with head_dim-sharded contractions).
+    if cfg.n_kv_heads % 16 == 0:
+        seq_axis, kv_axes = None, ("model", None)
+    else:
+        seq_axis, kv_axes = "model", (None, None)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        stacked = "blocks" in names
+        lead = (None,) if stacked else ()
+        nd = leaf.ndim - len(lead)
+        if names[-1] in ("k", "v"):
+            # (B, S, KV, hd)
+            return P(*lead, dp_axes, seq_axis, *kv_axes)
+        if names[-1] == "S":        # rwkv state (B, H, hd, hd): shard hd
+            return P(*lead, dp_axes, None, "model", None)
+        if names[-1] == "h":        # rg-lru (B, RD)
+            return P(*lead, dp_axes, "model")
+        if names[-1] == "conv":     # (B, W-1, RD)
+            return P(*lead, dp_axes, None, "model")
+        if names[-1] in ("shift", "cmix"):  # (B, D)
+            return P(*lead, dp_axes, None)
+        return P(*lead, *([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

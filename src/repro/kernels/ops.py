@@ -1,0 +1,53 @@
+"""jit'd dispatch wrappers for all Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode (Python emulation of
+the kernel body — correctness only); on TPU they compile through Mosaic.
+`use_kernels(False)` forces the pure-jnp reference path (used by ablations
+and the dry-run default, since Pallas does not lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+from repro.kernels.svrg_update import svrg_update as _svrg
+
+_USE_KERNELS = True
+
+
+def use_kernels(flag: bool) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = flag
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def svrg_update(x, g_x, g_z, mu, w_anchor, eta, gamma):
+    if not _USE_KERNELS:
+        return ref.svrg_update_ref(x, g_x, g_z, mu, w_anchor, eta, gamma)
+    return _svrg(x, g_x, g_z, mu, w_anchor, eta, gamma,
+                 interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    if not _USE_KERNELS:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, bq=bq, bk=bk,
+                  interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, w, u, *, tc=64):
+    if not _USE_KERNELS:
+        return ref.rwkv6_ref(r, k, v, w, u)
+    return _rwkv6(r, k, v, w, u, tc=tc, interpret=_interpret())
+
+
+def rglru_scan(a, x, h0=None, *, tc=128, cb=256):
+    if not _USE_KERNELS:
+        return ref.rglru_ref(a, x, h0)
+    return _rglru(a, x, h0, tc=tc, cb=cb, interpret=_interpret())

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each `*_ref` is the semantic definition; kernels must match it in
+interpret mode (CPU tests) and on real TPUs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def svrg_update_ref(x, g_x, g_z, mu, w_anchor, eta, gamma):
+    """One fused variance-reduced prox step (paper Alg. 1 step 2):
+
+        x <- x - eta * (g_x - g_z + mu + gamma * (x - w_anchor))
+    """
+    return x - eta * (g_x - g_z + mu + gamma * (x - w_anchor))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd). GQA via head grouping."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, group, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qf, kf) * hd**-0.5
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """RWKV6 recurrence. r/k/v: (B, H, T, N); w: (B, H, T, N) decays in
+    (0,1); u: (H, N) bonus. Returns (out (B,H,T,N), s_T (B,H,N,N))."""
+    B, H, T, N = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt,
+                        S + u[None].astype(jnp.float32)[..., None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, yt
+
+    xs = tuple(a.transpose(2, 0, 1, 3).astype(jnp.float32)
+               for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), s_fin
+
+
+def rglru_ref(a, x, h0=None):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + x_t.
+    a, x: (B, T, C) with a in (0,1). Returns (h (B,T,C), h_T (B,C))."""
+    B, T, C = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h_new = at * h + xt
+        return h_new, h_new
+
+    xs = (a.transpose(1, 0, 2).astype(jnp.float32),
+          x.transpose(1, 0, 2).astype(jnp.float32))
+    h_fin, hs = jax.lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2).astype(x.dtype), h_fin

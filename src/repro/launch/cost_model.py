@@ -1,0 +1,133 @@
+"""Analytic per-chip HBM traffic model for the roofline memory term.
+
+The dry-run compiles on the CPU backend whose fusion decisions do not mirror
+TPU, so HBM bytes cannot be read off the compiled module; instead we model
+them from first principles (MaxText-style) and record the formulas here.
+FLOPs and collective bytes COME FROM THE COMPILED HLO (hlo_analysis.py) —
+only the HBM term is analytic.
+
+Traffic components per chip per step (bytes, bf16 activations):
+
+  weights      train: 3 reads/step (fwd + bwd + gather-write for FSDP)
+               x inner steps; + optimizer update (master/state r+w, fp32)
+               serve: 1 read/step
+  activations  train: per layer, C_act * tokens_loc * d_model * 2B
+               (C_act=12: qkvo/mlp/norm in-out, x2 for backward, with remat
+               recompute included); prefill: C_act=6 (no backward)
+  attention    non-flash chunked path: scores+probs round trips
+               3 * B_loc*H_loc*S*S*4B / (real flash kernel removes this)
+  kv-cache     decode: full cache read per token + one slot write
+  moe dispatch dispatch/combine tensors (+ all expert weights read — the
+               static-capacity einsum touches every expert)
+  logits       head output r/w (+backward) in bf16
+"""
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.inputs import N_MICRO
+
+TP = 16  # model-axis size in the production meshes
+
+
+def _dp(n_chips: int) -> int:
+    return n_chips // TP
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _shard(n, ways):
+    """Padded shard size (GSPMD uneven sharding)."""
+    return _ceil_div(n, ways)
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+              *, variant: str = "mbprox", flash: bool = False,
+              inner_passes: int = 1) -> dict:
+    """Per-chip HBM bytes for one step; returns component breakdown."""
+    tp = 1 if cfg.parallelism == "dp_only" else TP
+    dp = n_chips // tp
+    n_micro_eff = 1 if cfg.parallelism == "dp_only" else N_MICRO
+    P = cfg.param_count()
+    p_bytes_dev = 2 * P / tp                   # bf16 compute copy per device
+    fsdp = cfg.name in ("llama4-maverick-400b-a17b", "grok-1-314b")
+    if fsdp:
+        master_dev = P * 2 / (tp * dp)         # bf16 masters, FSDP
+    else:
+        master_dev = P * {"float32": 4, "bfloat16": 2}[cfg.param_dtype] / tp
+
+    D, V = cfg.d_model, cfg.vocab_size
+    H_loc = _shard(cfg.n_heads, tp)
+    KV_loc = _shard(cfg.n_kv_heads, tp) if cfg.n_kv_heads > 1 \
+        else cfg.n_kv_heads
+    hd = cfg.head_dim
+    L = cfg.n_layers
+    n_attn_layers = (cfg.block_pattern.count("attn")
+                     + cfg.block_pattern.count("moe")) * cfg.n_super \
+        + sum(k in ("attn", "moe") for k in cfg.prefix_pattern)
+    n_local_attn = cfg.block_pattern.count("attn_local") * cfg.n_super \
+        + cfg.prefix_pattern.count("attn_local")
+
+    comp = {}
+    if shape.kind == "train":
+        n_inner = n_micro_eff * inner_passes
+        tokens_loc = shape.global_batch * shape.seq_len / dp / n_micro_eff
+        comp["weights"] = 3.0 * p_bytes_dev * n_inner
+        comp["optimizer"] = 4.0 * master_dev
+        comp["activations"] = 12.0 * L * tokens_loc * D * 2 * n_inner
+        if not flash:
+            S = shape.seq_len
+            B_loc = shape.global_batch / dp / n_micro_eff
+            attn = 3.0 * B_loc * H_loc * S * S * 4
+            comp["attention_scores"] = (attn * n_attn_layers
+                                        + attn * (cfg.window / S)
+                                        * n_local_attn) * n_inner
+        comp["logits"] = 4.0 * tokens_loc * _shard(V, tp) * 2 * n_inner
+        if cfg.n_experts:
+            n_moe = cfg.block_pattern.count("moe") * cfg.n_super
+            cap = cfg.capacity_factor * cfg.experts_per_token
+            comp["moe_dispatch"] = (6.0 * tokens_loc * D * 2 * cap * n_moe
+                                    * n_inner)
+    elif shape.kind == "prefill":
+        tokens_loc = shape.global_batch * shape.seq_len / dp
+        comp["weights"] = p_bytes_dev
+        comp["activations"] = 6.0 * L * tokens_loc * D * 2
+        S = shape.seq_len
+        B_loc = shape.global_batch / dp
+        if not flash:
+            attn = 3.0 * B_loc * H_loc * S * S * 4
+            comp["attention_scores"] = (attn * n_attn_layers
+                                        + attn * (cfg.window / S)
+                                        * n_local_attn)
+            # chunked path re-reads K/V per query chunk
+            n_chunks = _ceil_div(S, cfg.attn_chunk)
+            comp["kv_reread"] = (n_chunks * B_loc * S * KV_loc * hd * 2 * 2
+                                 * n_attn_layers)
+        comp["logits"] = 2.0 * tokens_loc * _shard(V, tp) * 2
+        if cfg.n_experts:
+            n_moe = cfg.block_pattern.count("moe") * cfg.n_super
+            cap = cfg.capacity_factor * cfg.experts_per_token
+            comp["moe_dispatch"] = 6.0 * tokens_loc * D * 2 * cap * n_moe
+    else:  # decode
+        comp["weights"] = p_bytes_dev
+        B_loc = _shard(shape.global_batch, dp)
+        S = shape.seq_len
+        kv_bytes = (2 * B_loc * min(S, 10**9) * KV_loc * hd * 2
+                    * n_attn_layers)
+        kv_bytes += (2 * B_loc * min(cfg.window, S) * KV_loc * hd * 2
+                     * n_local_attn)
+        comp["kv_cache"] = kv_bytes
+        # recurrent state r/w
+        n_rwkv = cfg.block_pattern.count("rwkv") * cfg.n_super
+        n_rec = (cfg.block_pattern.count("rec") * cfg.n_super
+                 + cfg.prefix_pattern.count("rec"))
+        comp["state"] = (2 * B_loc * cfg.n_heads * hd * hd * 4 * n_rwkv
+                         + 2 * B_loc * cfg.rnn_width * 4 * n_rec)
+        comp["activations"] = 12.0 * L * B_loc * D * 2
+        comp["logits"] = 2.0 * B_loc * _shard(V, tp) * 2
+
+    comp["total"] = float(sum(comp.values()))
+    return comp

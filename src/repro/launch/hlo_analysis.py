@@ -1,0 +1,297 @@
+"""HLO analysis: while-aware collective + dot-FLOP extraction, and the
+3-term roofline model.
+
+XLA's HloCostAnalysis (and compiled.cost_analysis()) visits while-loop bodies
+ONCE — for scan-over-layers / microbatch-scan programs that undercounts both
+flops and collective traffic by the trip counts. We therefore parse the
+post-SPMD HLO text into its computation graph, extract per-computation
+
+  * collective result bytes by op kind (+ replica group sizes),
+  * dot FLOPs (2 * prod(result_dims) * contracted_size),
+
+and propagate through call sites with while-loop trip counts (recovered from
+the loop-condition constant). Elementwise FLOPs are ignored (<<1% for LM
+workloads; stated in EXPERIMENTS.md).
+
+Roofline factors (ring algorithms):
+    all-reduce      2 (p-1)/p * bytes
+    all-gather      (p-1)/p   * bytes   (bytes = full gathered result)
+    reduce-scatter  (p-1)/p   * bytes
+    all-to-all      (p-1)/p   * bytes / p
+    collective-permute            bytes
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s
+per ICI link with 2 usable links per collective ring => 100 GB/s effective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 100e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->")
+_TRIP_RE = re.compile(r"known_trip_count\D+(\d+)")
+_CALL_RE = re.compile(
+    r"(?:body|to_apply|calls|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUP_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+[\w\-]+\(")
+_DOT_RE = re.compile(
+    r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\)(.*)$")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[\w\[\],{}\s/*=\d]+?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(s: str):
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    coll: dict                    # op -> {bytes, count, group_size}
+    dot_flops: float
+    whiles: list                  # (body_name, cond_name)
+    calls: list                   # plain to_apply / calls / fusion names
+    branches: list                # conditional branch computation sets
+    max_const: int = 1            # largest int constant (trip-count guess)
+
+
+def _split_computations(hlo: str):
+    comps, cur, name = {}, None, None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and ("->" in line):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    name = m.group(1)
+                    cur = []
+            continue
+        if line.startswith("}"):
+            comps[name] = cur
+            cur, name = None, None
+        else:
+            cur.append(line)
+    return comps
+
+
+def _analyze_comp(name: str, lines) -> _Comp:
+    coll = defaultdict(lambda: {"bytes": 0, "count": 0, "group_size": 1})
+    dot_flops = 0.0
+    whiles, calls, branches = [], [], []
+    max_const = 1
+    shapes = {}  # instruction name -> result dims (first shape in the type)
+    for line in lines:
+        s = line.strip()
+        mdef = _DEF_RE.match(s)
+        if mdef:
+            shapes[mdef.group(1)] = _first_shape_dims(mdef.group(2))
+        for m in _CONST_RE.finditer(s):
+            max_const = max(max_const, int(m.group(1)))
+        if " while(" in s:
+            mb = re.search(r"body=%?([\w.\-]+)", s)
+            mc = re.search(r"condition=%?([\w.\-]+)", s)
+            mt = _TRIP_RE.search(s)
+            whiles.append((mb.group(1) if mb else None,
+                           mc.group(1) if mc else None,
+                           int(mt.group(1)) if mt else None))
+            continue
+        mbr = _BRANCH_RE.search(s)
+        if mbr:
+            branches.append([c.strip().lstrip("%")
+                             for c in mbr.group(1).split(",")])
+            continue
+        if " dot(" in s and mdef:
+            md = _DOT_RE.search(s)
+            if md:
+                out_dims = shapes.get(mdef.group(1)) or []
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                lhs_shape = shapes.get(md.group(1)) or []
+                mcd = _CDIMS_RE.search(md.group(3))
+                cdims = ([int(x) for x in mcd.group(1).split(",") if x]
+                         if mcd else [])
+                csize = 1
+                for cd in cdims:
+                    if cd < len(lhs_shape):
+                        csize *= lhs_shape[cd]
+                dot_flops += 2.0 * out_elems * csize
+        if any(op in s for op in _COLL_OPS):
+            mcoll = _COLL_RE.search(s)
+            if mcoll:
+                nbytes = _shape_bytes(mcoll.group(1))
+                op = mcoll.group(2)
+                p = 1
+                g = _GROUP_ITOA_RE.search(s)
+                if g:
+                    p = int(g.group(2))
+                else:
+                    gl = _GROUP_LIST_RE.search(s)
+                    if gl:
+                        p = len(gl.group(1).split(","))
+                c = coll[op]
+                c["bytes"] += nbytes
+                c["count"] += 1
+                c["group_size"] = max(c["group_size"], p)
+        for mc in _CALL_RE.finditer(s):
+            if not s[mc.start():].startswith(("body", "condition")):
+                calls.append(mc.group(1))
+    return _Comp(name, {k: dict(v) for k, v in coll.items()}, dot_flops,
+                 whiles, calls, branches, max_const)
+
+
+def analyze_hlo(hlo_text: str, entry: str | None = None) -> dict:
+    """Trip-count-weighted totals: {'collectives': {...}, 'dot_flops': f}."""
+    raw = _split_computations(hlo_text)
+    comps = {n: _analyze_comp(n, ls) for n, ls in raw.items()}
+    if entry is None:
+        # ENTRY computation: the one never referenced by others
+        referenced = set()
+        for c in comps.values():
+            referenced.update(x for x, _, _ in c.whiles)
+            referenced.update(x for _, x, _ in c.whiles)
+            referenced.update(c.calls)
+            for br in c.branches:
+                referenced.update(br)
+        entries = [n for n in comps if n not in referenced]
+        entry = entries[-1] if entries else max(
+            comps, key=lambda n: len(raw[n]))
+
+    memo = {}
+
+    def visit(name, depth=0):
+        if name not in comps or depth > 64:
+            return {}, 0.0
+        if name in memo:
+            return memo[name]
+        memo[name] = ({}, 0.0)  # cycle guard
+        c = comps[name]
+        coll = {k: dict(v) for k, v in c.coll.items()}
+        flops = c.dot_flops
+
+        def acc(sub_coll, sub_flops, mult):
+            nonlocal flops
+            flops += sub_flops * mult
+            for op, st in sub_coll.items():
+                dst = coll.setdefault(
+                    op, {"bytes": 0, "count": 0, "group_size": 1})
+                dst["bytes"] += st["bytes"] * mult
+                dst["count"] += st["count"] * mult
+                dst["group_size"] = max(dst["group_size"], st["group_size"])
+
+        for body, cond, known_trips in c.whiles:
+            if known_trips is not None:
+                trips = known_trips
+            else:
+                trips = comps[cond].max_const if cond in comps else 1
+            sub = visit(body, depth + 1)
+            acc(sub[0], sub[1], max(trips, 1))
+        for callee in c.calls:
+            sub = visit(callee, depth + 1)
+            acc(sub[0], sub[1], 1)
+        for br in c.branches:
+            best = ({}, 0.0)
+            for b in br:
+                sub = visit(b, depth + 1)
+                if sub[1] >= best[1]:
+                    best = sub
+            acc(best[0], best[1], 1)
+        memo[name] = (coll, flops)
+        return memo[name]
+
+    coll, flops = visit(entry)
+    return {"collectives": coll, "dot_flops": flops, "entry": entry}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    return analyze_hlo(hlo_text)["collectives"]
+
+
+def collective_time(stats: dict, ici_bw: float = ICI_BW) -> float:
+    t = 0.0
+    for op, s in stats.items():
+        p = max(s["group_size"], 1)
+        b = s["bytes"]
+        if op == "all-reduce":
+            eff = 2.0 * (p - 1) / p * b
+        elif op in ("all-gather", "reduce-scatter"):
+            eff = (p - 1) / p * b
+        elif op == "all-to-all":
+            eff = (p - 1) / p * b / p
+        else:
+            eff = b
+        t += eff / ici_bw
+    return t
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                # per-chip, trip-weighted HLO dot flops
+    hbm_bytes: float            # per-chip analytic HBM traffic
+    collective_bytes: int
+    model_flops: float          # global useful flops (6ND / 2ND)
+    bottleneck: str
+    mfu_bound: float
+    useful_ratio: float         # model_flops / (flops * n_chips)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops_per_chip: float, hbm_bytes: float, coll_stats: dict,
+             n_chips: int, model_flops: float) -> Roofline:
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = collective_time(coll_stats)
+    coll_bytes = int(sum(s["bytes"] for s in coll_stats.values()))
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(max(terms.values()), 1e-30)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        flops=flops_per_chip, hbm_bytes=hbm_bytes,
+        collective_bytes=coll_bytes, model_flops=model_flops,
+        bottleneck=bottleneck,
+        mfu_bound=model_flops / (step_time * n_chips * PEAK_FLOPS),
+        useful_ratio=model_flops / max(flops_per_chip * n_chips, 1e-30))

@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+`input_specs(cfg, shape, mesh)` returns the argument pytree for the step
+function of that shape kind, with NamedShardings attached — the dry-run
+lowers against these directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import data_axes, dp_axes_for
+from repro.models import lm
+
+N_MICRO = 8  # microbatches per held minibatch (train shapes)
+
+
+def _sds(shape, dtype, mesh, spec):
+    spec = shd.sanitize_spec(spec, shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    # dp_only archs shard the batch over the whole mesh: one big held
+    # minibatch (n_micro=1), multiple inner passes (paper: any b works)
+    n_micro = 1 if cfg.parallelism == "dp_only" else min(N_MICRO, B)
+    Bm = B // n_micro
+    dp = dp_axes_for(cfg, mesh, batch=Bm)
+    mspec = P(None, dp)
+    batch = {}
+    if cfg.frontend == "vision":
+        s_text = S - cfg.vision_tokens
+        batch["tokens"] = _sds((n_micro, Bm, s_text), jnp.int32, mesh, mspec)
+        batch["targets"] = _sds((n_micro, Bm, s_text), jnp.int32, mesh, mspec)
+        batch["vision_emb"] = _sds(
+            (n_micro, Bm, cfg.vision_tokens, cfg.vision_dim),
+            jnp.bfloat16, mesh, mspec)
+    elif cfg.frontend == "audio":
+        batch["tokens"] = _sds((n_micro, Bm, S, cfg.n_codebooks), jnp.int32,
+                               mesh, mspec)
+        batch["targets"] = _sds((n_micro, Bm, S, cfg.n_codebooks), jnp.int32,
+                                mesh, mspec)
+    else:
+        batch["tokens"] = _sds((n_micro, Bm, S), jnp.int32, mesh, mspec)
+        batch["targets"] = _sds((n_micro, Bm, S), jnp.int32, mesh, mspec)
+    return batch
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    dp = dp_axes_for(cfg, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    mspec = P(dp)
+    batch = {}
+    if cfg.frontend == "vision":
+        s_text = S - cfg.vision_tokens
+        batch["tokens"] = _sds((B, s_text), jnp.int32, mesh, mspec)
+        batch["vision_emb"] = _sds((B, cfg.vision_tokens, cfg.vision_dim),
+                                   jnp.bfloat16, mesh, mspec)
+    elif cfg.frontend == "audio":
+        batch["tokens"] = _sds((B, S, cfg.n_codebooks), jnp.int32, mesh,
+                               mspec)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, mspec)
+    return batch
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(state, tokens, pos) structs for decode_step."""
+    dp = dp_axes_for(cfg, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    state_shapes = jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, B, max_len=S))
+    specs = shd.decode_state_specs(state_shapes, cfg, dp)
+    state = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), state_shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if cfg.frontend == "audio":
+        tokens = _sds((B, cfg.n_codebooks), jnp.int32, mesh, P(dp))
+    else:
+        tokens = _sds((B,), jnp.int32, mesh, P(dp))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return state, tokens, pos
+
+
+def params_struct(cfg: ModelConfig, mesh):
+    """Sharded ShapeDtypeStructs for the param pytree (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.param_specs(shapes, cfg)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)), specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Dispatch on shape kind; returns the step-function argument structs."""
+    if shape.kind == "train":
+        return train_batch_struct(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_batch_struct(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return decode_inputs_struct(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax import;
+smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever devices exist locally, as a ('data','model') mesh — used by
+    examples/tests so the same sharded code paths run on 1 CPU device."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axis names batch is sharded over (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_axes_for(cfg, mesh, batch: int | None = None) -> tuple:
+    """Data-parallel axes for an arch: 'dp_only' archs also fold the model
+    axis into data parallelism (params replicated). When `batch` is given,
+    the axis tuple is trimmed to the longest prefix that divides it (e.g.
+    batch 256 on the 512-chip multi-pod mesh -> ('pod','data'))."""
+    if getattr(cfg, "parallelism", "tp") == "dp_only":
+        axes = tuple(mesh.axis_names)
+    else:
+        axes = data_axes(mesh)
+    if batch is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        while axes:
+            ways = 1
+            for a in axes:
+                ways *= sizes[a]
+            if batch % ways == 0:
+                break
+            axes = axes[:-1]
+    return axes

@@ -1,0 +1,102 @@
+"""Step-function builders: train (MBProx paper-faithful / baseline AdamW),
+prefill, decode — shared by the dry-run, the training driver and benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import data_axes, dp_axes_for
+from repro.models import lm
+from repro.optim import mbprox as mbprox_lib
+from repro.optim.optimizers import adamw, clip_by_global_norm, sgd
+
+
+def make_loss_fn(cfg: ModelConfig, remat: bool = True):
+    def loss_fn(params, micro):
+        return lm.train_loss(params, cfg, micro, remat=remat)
+    return loss_fn
+
+
+# ----------------------------------------------------------------------------
+# Baseline: data-parallel AdamW, gradient accumulated over microbatches.
+# Collective profile: one grad all-reduce over data(+pod) per microbatch —
+# the "minibatch SGD" communication model of the paper's Table 1.
+# ----------------------------------------------------------------------------
+
+def make_baseline_train_step(cfg: ModelConfig, mesh):
+    loss_fn = make_loss_fn(cfg)
+    opt = adamw(state_dtype=jnp.bfloat16
+                if shd.needs_fsdp(cfg) else None)
+
+    def train_step(params, opt_state, batch, lr):
+        def micro_grad(carry, micro):
+            acc = carry
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                  micro)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(a.dtype), acc, g)
+            return acc, l
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16
+                                if shd.needs_fsdp(cfg) else jnp.float32),
+            params)
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+        grads, losses = lax.scan(micro_grad, zeros, batch)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": losses.mean(), "gnorm": gnorm}
+
+    return train_step, opt
+
+
+# ----------------------------------------------------------------------------
+# Paper technique: MBProx train step (local MP-DANE form or sync inexact form)
+# ----------------------------------------------------------------------------
+
+def default_mbprox_config(cfg: ModelConfig,
+                          **overrides) -> mbprox_lib.MBProxConfig:
+    variant = "sync" if shd.needs_fsdp(cfg) else "local"
+    base = dict(gamma=0.1, inner_lr=0.02, inner_momentum=0.9,
+                inner_passes=1, dane_correction=True, variant=variant)
+    base.update(overrides)
+    return mbprox_lib.MBProxConfig(**base)
+
+
+def make_mbprox_train_step(cfg: ModelConfig, mesh,
+                           mp_cfg: Optional[mbprox_lib.MBProxConfig] = None,
+                           micro_batch: Optional[int] = None):
+    mp_cfg = mp_cfg or default_mbprox_config(cfg)
+    loss_fn = make_loss_fn(cfg)
+    dp = dp_axes_for(cfg, mesh, batch=micro_batch)
+    step = mbprox_lib.make_mbprox_step(loss_fn, mp_cfg, mesh, dp)
+    inner_opt = sgd(momentum=mp_cfg.inner_momentum)
+
+    def train_step(params, inner_state, batch, lr):
+        return step(params, inner_state, batch, lr)
+
+    return train_step, inner_opt, mp_cfg
+
+
+# ----------------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = lm.forward(params, cfg, batch, remat=False)
+        return logits
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, state, tokens, pos):
+        return lm.decode_step(params, cfg, state, tokens, pos)
+    return decode

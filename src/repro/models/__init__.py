@@ -1,0 +1,2 @@
+# Import submodules directly (e.g. `from repro.models import lm`); the
+# package init stays empty to avoid import cycles with configs/.

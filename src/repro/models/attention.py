@@ -1,0 +1,218 @@
+"""GQA attention: chunked-causal (memory-safe long prefill), local-windowed,
+and single-token KV-cache decode.
+
+The chunked implementation scans over query chunks so peak score memory is
+O(B * H * chunk * S) instead of O(B * H * S^2) — required for the 32k prefill
+cells. On TPU the Pallas flash kernel (repro.kernels.flash_attention) replaces
+the inner chunk computation; the jnp path here doubles as its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_rope, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _qkv(params, x, n_heads, n_kv_heads, head_dim, positions, rope_theta):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, hd), k: (B, Sk, KV, hd) -> (B, H, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    q = q.reshape(B, Sq, KV, group, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, KV * group, Sq, k.shape[1])
+
+
+def _gqa_out(p, v):
+    """p: (B, H, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+
+    Probabilities are cast DOWN to the value dtype (not v up to f32 — that
+    would materialize an f32 copy of the whole KV cache at decode); the
+    matmul accumulates in f32 via preferred_element_type.
+    """
+    B, H, Sq, Sk = p.shape
+    KV = v.shape[2]
+    group = H // KV
+    p = p.reshape(B, KV, group, Sq, Sk).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, -1)
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int = 512, window: int = 0,
+                             prefix_len: int = 0):
+    """Exact causal attention, scanned over query chunks.
+
+    window > 0 => local attention (each query sees the last `window` keys).
+    prefix_len > 0 => the first prefix_len positions attend bidirectionally
+    (prefix-LM for the VLM arch).
+    """
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(S)
+
+    def one_chunk(ci, qi):
+        qpos = ci * chunk + jnp.arange(chunk)
+        s = _gqa_scores(qi, k) * scale                   # (B,H,chunk,S) fp32
+        causal = kpos[None, :] <= qpos[:, None]
+        if prefix_len > 0:
+            in_prefix = jnp.logical_and(qpos[:, None] < prefix_len,
+                                        kpos[None, :] < prefix_len)
+            causal = jnp.logical_or(causal, in_prefix)
+        if window > 0:
+            causal = jnp.logical_and(causal,
+                                     kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(causal[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v)                            # (B,chunk,H,hd)
+
+    out = lax.map(lambda args: one_chunk(*args),
+                  (jnp.arange(n_chunks), qc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, H, hd)
+    return out[:, :S].astype(v.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Bisection-causal attention: static-shape causal decomposition that skips
+# the strictly-upper-triangular work.  causal(S) = [causal(S/2) on A;
+# merge(full(B->A), causal(S/2) on B)], recursed `depth` levels: FLOPs drop
+# from S^2 to (1/2 + 1/2^{depth+1}) S^2 — the HLO-measurable analogue of the
+# flash kernel's block skipping (EXPERIMENTS.md §Perf).
+# ----------------------------------------------------------------------------
+
+def _attn_stats(q, k, v, scale, causal):
+    """Unnormalized flash stats. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd).
+    Returns m (B,H,Sq), l (B,H,Sq), acc (B,Sq,H,hd) fp32."""
+    s = _gqa_scores(q, k) * scale                       # (B,H,Sq,Sk) fp32
+    if causal:
+        Sq, Sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = _gqa_out(p, v).astype(jnp.float32)
+    return m, l, acc
+
+
+def _merge_stats(a, b):
+    m1, l1, acc1 = a
+    m2, l2, acc2 = b
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    l = a1 * l1 + a2 * l2
+    # alphas are (B,H,Sq); accs are (B,Sq,H,hd)
+    w1 = a1.transpose(0, 2, 1)[..., None]
+    w2 = a2.transpose(0, 2, 1)[..., None]
+    return m, l, w1 * acc1 + w2 * acc2
+
+
+def _bisect_stats(q, k, v, scale, depth):
+    S = q.shape[1]
+    if depth <= 0 or S % 2 or S < 256:
+        return _attn_stats(q, k, v, scale, causal=True)
+    h = S // 2
+    sa = _bisect_stats(q[:, :h], k[:, :h], v[:, :h], scale, depth - 1)
+    sbd = _bisect_stats(q[:, h:], k[:, h:], v[:, h:], scale, depth - 1)
+    sbr = _attn_stats(q[:, h:], k[:, :h], v[:, :h], scale, causal=False)
+    sb = _merge_stats(sbd, sbr)
+    m = jnp.concatenate([sa[0], sb[0]], axis=-1)
+    l = jnp.concatenate([sa[1], sb[1]], axis=-1)
+    acc = jnp.concatenate([sa[2], sb[2]], axis=1)
+    return m, l, acc
+
+
+def bisect_causal_attention(q, k, v, *, depth: int = 3):
+    """Exact causal attention with ~(0.5 + 2^-(depth+1)) S^2 FLOPs."""
+    hd = q.shape[-1]
+    m, l, acc = _bisect_stats(q, k, v, hd**-0.5, depth)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(v.dtype)
+
+
+def attention_block(params, x, positions, cfg, *, window: int = 0,
+                    prefix_len: int = 0):
+    """Full attention sub-layer (projections + chunked attention)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                   positions, cfg.rope_theta)
+    if (cfg.attn_impl == "bisect" and window == 0 and prefix_len == 0
+            and S % 2 == 0 and S >= 512):
+        o = bisect_causal_attention(q, k, v)
+    else:
+        o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                                     window=window, prefix_len=prefix_len)
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+# ----------------------------------------------------------------------------
+# KV-cache decode
+# ----------------------------------------------------------------------------
+
+def init_kv_cache(batch, max_len, n_kv_heads, head_dim, dtype, n_super=None):
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    if n_super is not None:
+        shape = (n_super,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention_block(params, x, cache, pos, cfg, *, window: int = 0):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S_max, KV, hd);
+    pos: scalar int32 current position. Returns (out, new_cache).
+
+    For window > 0 the cache is a rolling buffer of size `window`.
+    """
+    B, _, D = x.shape
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                   positions, cfg.rope_theta)
+    S_max = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % jnp.maximum(window, 1), pos)
+    slot = jnp.asarray(slot, jnp.int32)
+    ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    s = _gqa_scores(q, ck) * (cfg.head_dim ** -0.5)      # (B,H,1,S_max)
+    kpos = jnp.arange(S_max)
+    if window > 0:
+        # rolling buffer: valid slots are those already written
+        written = jnp.minimum(pos + 1, S_max)
+        valid = kpos < written
+    else:
+        valid = kpos <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, cv).reshape(B, 1, -1)
+    return (o @ params["wo"]).astype(x.dtype), {"k": ck, "v": cv}

@@ -1,0 +1,41 @@
+"""Modality frontend STUBS (per assignment brief).
+
+The VLM / audio architectures specify the transformer backbone only; the
+frontend is a stub whose job is to map precomputed frontend outputs into the
+backbone's embedding space:
+
+  * vision (paligemma): `input_specs()` provides precomputed SigLIP patch
+    embeddings (B, n_patches, vision_dim); here we only project them to
+    d_model. The SigLIP tower itself is NOT implemented (stub).
+  * audio (musicgen): `input_specs()` provides EnCodec codebook token ids
+    (B, S, n_codebooks); here we sum per-codebook embeddings (the delay
+    pattern is treated as preapplied by the tokenizer stub).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, init_embed
+
+
+def init_vision_frontend(key, vision_dim, d_model, dtype):
+    return {"proj": init_dense(key, vision_dim, d_model, dtype)}
+
+
+def vision_embed(params, vision_emb):
+    """(B, n_patches, vision_dim) -> (B, n_patches, d_model)."""
+    return vision_emb @ params["proj"]
+
+
+def init_audio_embed(key, n_codebooks, vocab, d_model, dtype):
+    keys = jax.random.split(key, n_codebooks)
+    return jnp.stack([init_embed(k, vocab, d_model, dtype) for k in keys])
+
+
+def audio_embed(codebook_embeds, tokens):
+    """codebook_embeds: (n_cb, Vc, D); tokens: (B, S, n_cb) -> (B, S, D)."""
+    n_cb = codebook_embeds.shape[0]
+    embs = jnp.stack([codebook_embeds[c][tokens[..., c]]
+                      for c in range(n_cb)])           # (n_cb, B, S, D)
+    return embs.sum(0)

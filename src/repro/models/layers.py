@@ -1,0 +1,93 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are plain dicts of jnp arrays; layer-stacked leaves carry a leading
+    `n_super` axis consumed by lax.scan in lm.py.
+  * activations run in cfg.dtype (bf16 by default), softmax/norms in fp32.
+  * no framework dependency (flax/haiku) — keeps sharding rules transparent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": init_dense(k1, d_model, d_ff, dtype),
+                "w_up": init_dense(k2, d_model, d_ff, dtype),
+                "w_down": init_dense(k3, d_ff, d_model, dtype)}
+    if kind == "gelu":
+        return {"w_up": init_dense(k1, d_model, d_ff, dtype),
+                "w_down": init_dense(k2, d_ff, d_model, dtype)}
+    raise ValueError(kind)
+
+
+def mlp(params, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    else:
+        raise ValueError(kind)
+    return h @ params["w_down"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+def init_embed(key, vocab, d_model, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def softmax_xent(logits, targets, z_loss: float = 0.0):
+    """Stable cross-entropy in fp32. logits (..., V), targets (...) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss > 0.0:
+        loss = loss + z_loss * lse**2
+    return loss

@@ -1,0 +1,388 @@
+"""Decoder LM supporting every assigned architecture via block patterns.
+
+Layer stacking: `cfg.block_pattern` defines a *superblock* (e.g. ('rec','rec',
+'attn_local') for recurrentgemma, ('attn','moe') for llama4); the model is
+`prefix_pattern` unrolled layers followed by `lax.scan` over `n_super`
+stacked superblocks (keeps HLO size O(1) in depth — essential for the 512-
+device dry-run compiles) with `jax.checkpoint` rematerialization.
+
+Entry points:
+  init_params(key, cfg)
+  train_loss(params, cfg, batch)              -> loss, metrics
+  forward(params, cfg, batch)                 -> logits            (prefill)
+  init_decode_state(cfg, batch, max_len)      -> state pytree
+  decode_step(params, cfg, state, tokens, pos)-> logits, new state (decode)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import context as dctx
+from repro.models import attention, frontends, moe as moe_lib, recurrent
+from repro.models.layers import (init_embed, init_mlp, mlp, rms_norm,
+                                 softmax_xent)
+
+
+def _pin_block(block_params):
+    """Apply in-loop sharding constraints to sliced layer weights (see
+    distributed/context.py). No-op when no specs are registered."""
+    specs = dctx.get_inloop_specs()
+    if specs is None:
+        return block_params
+    return jax.lax.with_sharding_constraint(block_params, specs)
+
+
+def _pin_act(h):
+    """Pin activations to batch-over-data (see distributed/context.py)."""
+    spec = dctx.get_activation_spec()
+    if spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+# ----------------------------------------------------------------------------
+# Block init / apply
+# ----------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    D, dt = cfg.d_model, cfg.p_dtype
+    norms = {"norm1": jnp.zeros((D,), dt), "norm2": jnp.zeros((D,), dt)}
+    if kind in ("attn", "attn_local"):
+        return {**norms,
+                "attn": attention.init_attention(
+                    k1, D, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt, cfg.mlp_kind)}
+    if kind == "moe":
+        return {**norms,
+                "attn": attention.init_attention(
+                    k1, D, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt),
+                "moe": moe_lib.init_moe(k2, D, cfg.d_ff, cfg.n_experts, dt,
+                                        cfg.mlp_kind)}
+    if kind == "rwkv":
+        return {**norms,
+                "tmix": recurrent.init_rwkv(k1, D, cfg.n_heads, cfg.head_dim,
+                                            dt),
+                "cmix": recurrent.init_rwkv_channel_mix(k2, D, cfg.d_ff, dt)}
+    if kind == "rec":
+        return {**norms,
+                "rec": recurrent.init_rglru_block(k1, D, cfg.rnn_width,
+                                                  cfg.conv_width, dt),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dt, cfg.mlp_kind)}
+    raise ValueError(kind)
+
+
+def _apply_block_seq(params, kind: str, x, positions, cfg: ModelConfig,
+                     state=None, prefix_len: int = 0):
+    """Sequence form (train / prefill). Returns (x, new_state, aux)."""
+    aux = {}
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    new_state = state
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        o = attention.attention_block(params["attn"], h, positions, cfg,
+                                      window=window, prefix_len=prefix_len)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+    elif kind == "moe":
+        o = attention.attention_block(params["attn"], h, positions, cfg,
+                                      prefix_len=prefix_len)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        o2, aux = moe_lib.moe_block(params["moe"], h2, cfg,
+                                    kind=cfg.mlp_kind)
+        x = x + o2
+    elif kind == "rwkv":
+        st_t = None if state is None else state["tmix"]
+        o, st_t = recurrent.rwkv_seq(params["tmix"], h, cfg, st_t)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        st_c = None if state is None else state["cmix"]
+        o2, shift = recurrent.rwkv_channel_mix(params["cmix"], h2, st_c)
+        x = x + o2
+        new_state = {"tmix": st_t, "cmix": shift}
+    elif kind == "rec":
+        st = None if state is None else state["rec"]
+        o, st = recurrent.rglru_block_seq(params["rec"], h, cfg, st)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        new_state = {"rec": st}
+    else:
+        raise ValueError(kind)
+    return x, new_state, aux
+
+
+# ----------------------------------------------------------------------------
+# Model init
+# ----------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 8)
+    D, V, dt = cfg.d_model, cfg.vocab_size, cfg.p_dtype
+    params = {}
+    if cfg.frontend == "audio":
+        params["embed"] = frontends.init_audio_embed(
+            keys[0], cfg.n_codebooks, V, D, dt)
+    else:
+        params["embed"] = init_embed(keys[0], V, D, dt)
+    if cfg.frontend == "vision":
+        params["vision"] = frontends.init_vision_frontend(
+            keys[1], cfg.vision_dim, D, dt)
+
+    # prefix (remainder) layers: unrolled, small
+    prefix = []
+    for i, kind in enumerate(cfg.prefix_pattern):
+        prefix.append(_init_block(jax.random.fold_in(keys[2], i), cfg, kind))
+    params["prefix"] = prefix
+
+    # stacked superblocks: one stacked pytree per pattern position
+    blocks = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        layer_keys = jax.random.split(
+            jax.random.fold_in(keys[3], pi), cfg.n_super)
+        blocks[f"p{pi}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind))(layer_keys)
+    params["blocks"] = blocks
+
+    params["final_norm"] = jnp.zeros((D,), dt)
+    if not cfg.tie_embeddings:
+        if cfg.frontend == "audio":
+            params["head"] = (jax.random.normal(
+                keys[4], (D, cfg.n_codebooks * V)) * D**-0.5).astype(dt)
+        else:
+            params["head"] = (jax.random.normal(keys[4], (D, V))
+                              * D**-0.5).astype(dt)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Sequence forward (train / prefill)
+# ----------------------------------------------------------------------------
+
+def cast_params(params, cfg: ModelConfig):
+    """Cast float params to the compute dtype (single cast at step entry;
+    master copies stay in cfg.param_dtype — standard mixed precision)."""
+    dt = cfg.act_dtype
+
+    def cast(p):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dt)
+        return p
+
+    return jax.tree.map(cast, params)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Returns (h (B,S,D), positions (B,S), prefix_len)."""
+    if cfg.frontend == "vision":
+        tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+        vis_emb = frontends.vision_embed(params["vision"],
+                                         batch["vision_emb"]
+                                         .astype(cfg.act_dtype))
+        h = jnp.concatenate([vis_emb.astype(cfg.act_dtype),
+                             tok_emb.astype(cfg.act_dtype)], axis=1)
+        prefix_len = vis_emb.shape[1]
+    elif cfg.frontend == "audio":
+        h = frontends.audio_embed(params["embed"],
+                                  batch["tokens"]).astype(cfg.act_dtype)
+        prefix_len = 0
+    else:
+        h = jnp.take(params["embed"], batch["tokens"],
+                     axis=0).astype(cfg.act_dtype)
+        prefix_len = 0
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return h, positions, prefix_len
+
+
+def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
+                    remat: bool = True):
+    aux_acc = {"moe_aux": 0.0, "moe_zloss": 0.0}
+
+    for p, kind in zip(params["prefix"], cfg.prefix_pattern):
+        h, _, aux = _apply_block_seq(p, kind, h, positions, cfg,
+                                     prefix_len=prefix_len)
+        for k in aux:
+            aux_acc[k] = aux_acc[k] + aux[k]
+
+    def superblock(h, block_params):
+        block_params = _pin_block(block_params)
+        h = _pin_act(h)
+        aux_s = {"moe_aux": jnp.zeros((), jnp.float32),
+                 "moe_zloss": jnp.zeros((), jnp.float32)}
+        for pi, kind in enumerate(cfg.block_pattern):
+            h, _, aux = _apply_block_seq(block_params[f"p{pi}"], kind, h,
+                                         positions, cfg,
+                                         prefix_len=prefix_len)
+            for k in aux:
+                aux_s[k] = aux_s[k] + aux[k]
+        return h, aux_s
+
+    if remat:
+        # 'dots' saves matmul outputs so backward skips the re-forward —
+        # but only dots WITHOUT batch dims (saving the (B,H,S,S) attention
+        # score dots costs ~18 GB/device at 4k; measured, §Perf)
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        fn = jax.checkpoint(superblock, policy=policy)
+    else:
+        fn = superblock
+    h, auxs = lax.scan(lambda c, p: fn(c, p), h, params["blocks"])
+    for k in aux_acc:
+        aux_acc[k] = aux_acc[k] + (auxs[k].sum() if k in auxs else 0.0)
+    return h, aux_acc
+
+
+def forward(params, cfg: ModelConfig, batch, remat: bool = False):
+    """Full-sequence logits (prefill). For vision inputs, logits cover the
+    text region only."""
+    params = cast_params(params, cfg)
+    h, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    h, aux = _run_blocks_seq(params, cfg, h, positions, prefix_len,
+                             remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "vision":
+        h = h[:, prefix_len:]
+    logits = _head(params, cfg, h)
+    return logits, aux
+
+
+def _head(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        table = params["embed"]
+        if cfg.frontend == "audio":
+            # (n_cb, Vc, D) -> logits (B,S,n_cb,Vc)
+            return jnp.einsum("bsd,cvd->bscv", h, table)
+        return h @ table.T
+    head = params["head"]
+    if cfg.frontend == "audio":
+        B, S, D = h.shape
+        return (h @ head).reshape(B, S, cfg.n_codebooks, cfg.vocab_size)
+    return h @ head
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    targets = batch["targets"]
+    loss = softmax_xent(logits, targets).mean()
+    total = loss + 0.01 * aux["moe_aux"] + 1e-4 * aux["moe_zloss"]
+    return total, {"xent": loss, **aux}
+
+
+# ----------------------------------------------------------------------------
+# Decode (single-token step with per-layer state)
+# ----------------------------------------------------------------------------
+
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype):
+    if kind == "attn":
+        return attention.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                       cfg.head_dim, dtype)
+    if kind == "attn_local":
+        return attention.init_kv_cache(batch, min(cfg.window, max_len),
+                                       cfg.n_kv_heads, cfg.head_dim, dtype)
+    if kind == "moe":
+        return attention.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                       cfg.head_dim, dtype)
+    if kind == "rwkv":
+        return {"tmix": {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+                         "S": jnp.zeros((batch, cfg.n_heads, cfg.head_dim,
+                                         cfg.head_dim), jnp.float32)},
+                "cmix": jnp.zeros((batch, cfg.d_model), dtype)}
+    if kind == "rec":
+        return {"rec": {"h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+                        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                                           cfg.rnn_width), dtype)}}
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.act_dtype
+    state = {"prefix": [
+        _init_block_state(cfg, kind, batch, max_len, dt)
+        for kind in cfg.prefix_pattern]}
+    blocks = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        one = _init_block_state(cfg, kind, batch, max_len, dt)
+        blocks[f"p{pi}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_super,) + x.shape),
+            one)
+    state["blocks"] = blocks
+    return state
+
+
+def _apply_block_step(params, kind: str, x, pos, cfg: ModelConfig, state):
+    """One-token form. x: (B,1,D)."""
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local", "moe"):
+        window = cfg.window if kind == "attn_local" else 0
+        o, new_cache = attention.decode_attention_block(
+            params["attn"], h, state, pos, cfg, window=window)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe_lib.moe_block(params["moe"], h2, cfg,
+                                      kind=cfg.mlp_kind)
+            x = x + o2
+        else:
+            x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        return x, new_cache
+    if kind == "rwkv":
+        o, st_t = recurrent.rwkv_seq(params["tmix"], h, cfg, state["tmix"])
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        o2, shift = recurrent.rwkv_channel_mix(params["cmix"], h2,
+                                               state["cmix"])
+        x = x + o2
+        return x, {"tmix": st_t, "cmix": shift}
+    if kind == "rec":
+        o, st = recurrent.rglru_block_seq(params["rec"], h, cfg,
+                                          state["rec"])
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        return x, {"rec": st}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, pos):
+    """tokens: (B,) int32 (or (B, n_cb) for audio); pos: scalar int32.
+    Returns (logits, new_state)."""
+    params = cast_params(params, cfg)
+    if cfg.frontend == "audio":
+        h = frontends.audio_embed(params["embed"],
+                                  tokens[:, None, :]).astype(cfg.act_dtype)
+    else:
+        h = jnp.take(params["embed"], tokens[:, None],
+                     axis=0).astype(cfg.act_dtype)
+
+    new_prefix = []
+    for p, kind, st in zip(params["prefix"], cfg.prefix_pattern,
+                           state["prefix"]):
+        h, st_new = _apply_block_step(p, kind, h, pos, cfg, st)
+        new_prefix.append(st_new)
+
+    def superblock(h, xs):
+        block_params, block_state = xs
+        block_params = _pin_block(block_params)
+        h = _pin_act(h)
+        new_state = {}
+        for pi, kind in enumerate(cfg.block_pattern):
+            h, st = _apply_block_step(block_params[f"p{pi}"], kind, h, pos,
+                                      cfg, block_state[f"p{pi}"])
+            new_state[f"p{pi}"] = st
+        return h, new_state
+
+    h, new_blocks = lax.scan(superblock, h,
+                             (params["blocks"], state["blocks"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, cfg, h)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}

@@ -1,0 +1,208 @@
+"""Recurrent token mixers: RWKV6 ("Finch") and RG-LRU (RecurrentGemma).
+
+Both support:
+  * sequence form  (training / prefill): lax.scan over time (the Pallas
+    chunked kernels in repro.kernels replace this on TPU; this is the oracle)
+  * step form      (decode): O(1) state per token — the reason these archs
+    run the long_500k cell.
+
+RWKV6 fidelity notes: data-dependent per-channel decay through a LoRA on the
+token-shifted input (the Finch hallmark) and the per-head bonus `u` are
+implemented; the five-way ddlerp is reduced to a single learned static mix
+per projection (documented simplification, DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import init_dense
+
+
+# ----------------------------------------------------------------------------
+# RWKV6 time-mix
+# ----------------------------------------------------------------------------
+
+def init_rwkv(key, d_model, n_heads, head_dim, dtype, lora_rank: int = 32):
+    ks = jax.random.split(key, 10)
+    dh = n_heads * head_dim
+    return {
+        "w_r": init_dense(ks[0], d_model, dh, dtype),
+        "w_k": init_dense(ks[1], d_model, dh, dtype),
+        "w_v": init_dense(ks[2], d_model, dh, dtype),
+        "w_g": init_dense(ks[3], d_model, dh, dtype),
+        "w_o": init_dense(ks[4], dh, d_model, dtype),
+        # static token-shift mixes (one per projection r,k,v,g,w)
+        "mix": (jax.random.uniform(ks[5], (5, d_model)) * 0.5).astype(dtype),
+        # data-dependent decay: w_t = exp(-exp(decay_base + lora))
+        "decay_base": jnp.zeros((dh,), dtype),
+        "decay_A": init_dense(ks[6], d_model, lora_rank, dtype),
+        "decay_B": init_dense(ks[7], lora_rank, dh, dtype, scale=0.01),
+        "bonus_u": (jax.random.normal(ks[8], (n_heads, head_dim))
+                    * 0.1).astype(dtype),
+        "ln_scale": jnp.ones((dh,), dtype),
+    }
+
+
+def _rwkv_projections(params, x, x_prev, n_heads, head_dim):
+    """x: (B, S, D); x_prev: (B, S, D) token-shifted input."""
+    mix = params["mix"].astype(x.dtype)
+    xr = x + (x_prev - x) * mix[0]
+    xk = x + (x_prev - x) * mix[1]
+    xv = x + (x_prev - x) * mix[2]
+    xg = x + (x_prev - x) * mix[3]
+    xw = x + (x_prev - x) * mix[4]
+    B, S, _ = x.shape
+    shp = (B, S, n_heads, head_dim)
+    r = (xr @ params["w_r"]).reshape(shp)
+    k = (xk @ params["w_k"]).reshape(shp)
+    v = (xv @ params["w_v"]).reshape(shp)
+    g = jax.nn.silu(xg @ params["w_g"])
+    d = params["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ params["decay_A"]) @ params["decay_B"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(d)).reshape(shp)               # in (0,1), fp32
+    return r, k, v, g, w
+
+
+def _rwkv_group_norm(y, scale, n_heads, head_dim, eps=1e-5):
+    B, S = y.shape[:2]
+    yf = y.reshape(B, S, n_heads, head_dim).astype(jnp.float32)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mean) * lax.rsqrt(var + eps)
+    return (yf.reshape(B, S, -1) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_seq(params, x, cfg, state=None):
+    """Sequence form. x: (B, S, D). Returns (y, new_state).
+
+    state = {"shift": (B, D) last token, "S": (B, H, hd, hd) wkv state}.
+    """
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = {"shift": jnp.zeros((B, D), x.dtype),
+                 "S": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    x_prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_projections(params, x, x_prev, H, hd)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    def step(Sst, inp):
+        rt, kt, vt, wt = inp                             # (B,H,hd) each
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,hd,hd)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, Sst + u[..., None] * kv)
+        S_new = wt[..., :, None] * Sst + kv
+        return S_new, yt
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    S_fin, ys = lax.scan(step, state["S"], xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * hd).astype(x.dtype)
+    y = _rwkv_group_norm(y, params["ln_scale"], H, hd) * g
+    out = y @ params["w_o"]
+    return out, {"shift": x[:, -1], "S": S_fin}
+
+
+def rwkv_step(params, x, cfg, state):
+    """Single-token decode. x: (B, 1, D)."""
+    y, new_state = rwkv_seq(params, x, cfg,
+                            state={"shift": state["shift"],
+                                   "S": state["S"]})
+    return y, new_state
+
+
+def init_rwkv_channel_mix(key, d_model, d_ff, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"w_k": init_dense(k1, d_model, d_ff, dtype),
+            "w_v": init_dense(k2, d_ff, d_model, dtype),
+            "w_r": init_dense(k3, d_model, d_model, dtype),
+            "mix": (jax.random.uniform(k4, (2, d_model)) * 0.5).astype(dtype)}
+
+
+def rwkv_channel_mix(params, x, shift_state=None):
+    """RWKV channel mix (relu^2). Returns (y, last_token)."""
+    B, S, D = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, D), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    mix = params["mix"].astype(x.dtype)
+    xk = x + (x_prev - x) * mix[0]
+    xr = x + (x_prev - x) * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"]), x[:, -1]
+
+
+# ----------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ----------------------------------------------------------------------------
+
+def init_rglru_block(key, d_model, rnn_width, conv_width, dtype):
+    ks = jax.random.split(key, 7)
+    rd = rnn_width
+    return {
+        "w_in_rec": init_dense(ks[0], d_model, rd, dtype),
+        "w_in_gate": init_dense(ks[1], d_model, rd, dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, rd))
+                   * (conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((rd,), dtype),
+        "w_a": init_dense(ks[3], rd, rd, dtype, scale=rd**-0.5),
+        "b_a": jnp.zeros((rd,), dtype),
+        "w_x": init_dense(ks[4], rd, rd, dtype, scale=rd**-0.5),
+        "b_x": jnp.zeros((rd,), dtype),
+        # Lambda parametrized so a_t in [0.9, 0.999] at init (Griffin)
+        "log_lambda": jnp.linspace(-4.323, -9.0, rd).astype(jnp.float32),
+        "w_out": init_dense(ks[5], rd, d_model, dtype),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_gates(params, x):
+    r = jax.nn.sigmoid(x @ params["w_a"] + params["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ params["w_x"] + params["b_x"]).astype(jnp.float32)
+    log_a = -_RG_C * jax.nn.softplus(params["log_lambda"]) * r
+    a = jnp.exp(log_a)
+    gated_x = (i * x.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12))
+    return a, gated_x
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B, S, C); w: (W, C) depthwise. state: (B, W-1, C) history."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b, xp[:, -(W - 1):]
+
+
+def rglru_block_seq(params, x, cfg, state=None):
+    """Griffin recurrent block, sequence form. x: (B, S, D)."""
+    B, S, D = x.shape
+    rd = params["w_in_rec"].shape[1]
+    if state is None:
+        state = {"h": jnp.zeros((B, rd), jnp.float32),
+                 "conv": jnp.zeros((B, params["conv_w"].shape[0] - 1, rd),
+                                   x.dtype)}
+    branch = x @ params["w_in_rec"]
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    branch, conv_state = _causal_conv1d(branch, params["conv_w"],
+                                        params["conv_b"], state["conv"])
+    a, gx = _rglru_gates(params, branch)
+
+    def step(h, inp):
+        at, gxt = inp
+        h_new = at * h + gxt
+        return h_new, h_new
+
+    h_fin, hs = lax.scan(step, state["h"],
+                         (a.transpose(1, 0, 2), gx.transpose(1, 0, 2)))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) * gate
+    return y @ params["w_out"], {"h": h_fin, "conv": conv_state}

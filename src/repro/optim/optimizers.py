@@ -1,0 +1,111 @@
+"""Pure-pytree optimizers (no optax dependency — keeps sharding transparent:
+every state leaf mirrors its param leaf so PartitionSpecs transfer 1:1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable          # params -> opt_state
+    update: Callable        # (grads, opt_state, params, lr) -> (new_p, new_s)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False,
+        state_dtype=None) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(
+            lambda p: jnp.zeros_like(
+                p, dtype=state_dtype or p.dtype), params)
+
+    def _apply(p, s, lr):
+        # update math in f32, cast back (bf16 params stay bf16)
+        return (p.astype(jnp.float32)
+                - lr * s.astype(jnp.float32)).astype(p.dtype)
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            new_p = jax.tree.map(lambda p, g: _apply(p, g, lr),
+                                 params, grads)
+            return new_p, ()
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + _cast_like(g, m), state, grads)
+        if nesterov:
+            step = jax.tree.map(
+                lambda m, g: momentum * m + _cast_like(g, m), new_m, grads)
+        else:
+            step = new_m
+        new_p = jax.tree.map(lambda p, s: _apply(p, s, lr), params, step)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=state_dtype or p.dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * _cast_like(g, m),
+            state["m"], grads)
+        new_v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * _cast_like(
+                jnp.square(g.astype(jnp.float32)), v),
+            state["v"], grads)
+
+        def step(p, m, v):
+            mh = m.astype(jnp.float32) / c1
+            vh = v.astype(jnp.float32) / c2
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_p = jax.tree.map(step, params, new_m, new_v)
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Linear warmup + cosine decay."""
+    peak: float
+    warmup: int = 100
+    total: int = 10000
+    floor: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak * step / max(self.warmup, 1)
+        frac = jnp.clip((step - self.warmup)
+                        / max(self.total - self.warmup, 1), 0.0, 1.0)
+        cos = self.floor + (1 - self.floor) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < self.warmup, warm, self.peak * cos)

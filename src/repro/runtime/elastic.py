@@ -1,0 +1,36 @@
+"""Elastic scaling: re-mesh and re-shard state when the device count
+changes between (or during) runs.
+
+Minibatch-prox is indifferent to m changing across outer steps — the
+schedules (gamma, T) are recomputed from theory.py for the new m, and the
+state that must survive is only (params, anchor) — so elasticity reduces to
+resharding one pytree onto the new mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.distributed import sharding as shd
+
+
+def remesh_state(state, cfg, old_mesh, new_mesh):
+    """Reshard (params-like pytrees) from old_mesh onto new_mesh."""
+    def move(leaf, spec):
+        spec = shd.sanitize_spec(spec, leaf.shape, new_mesh)
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    specs = shd.param_specs(state, cfg)
+    return jax.tree.map(move, state, specs,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def rebalance_plan(n_old: int, n_new: int, b: int, T_remaining: int):
+    """Recompute the outer schedule when machine count changes: keep the
+    total sample budget n = b*m*T constant (paper Thm 10 parameterization).
+
+    Returns (new_b, new_T): we hold per-machine memory b fixed and stretch/
+    shrink T so b*m*T is preserved."""
+    total = b * n_old * T_remaining
+    new_T = max(1, total // (b * n_new))
+    return b, new_T

@@ -1,0 +1,202 @@
+"""Tests for MP-DSVRG (Alg. 1), MP-DANE (Alg. 2) and the baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prox, theory
+from repro.core.baselines import (run_acc_minibatch_sgd, run_dsvrg_erm,
+                                  run_emso, run_minibatch_sgd,
+                                  run_single_sgd)
+from repro.core.mp_dane import run_mp_dane
+from repro.core.mp_dsvrg import run_mp_dsvrg
+from repro.core.losses import loss_constants
+from repro.data.synthetic import LeastSquaresStream
+
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return LeastSquaresStream(dim=DIM, noise=0.1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def spec(stream):
+    X, y = stream.sample(jax.random.PRNGKey(1), 4096)
+    L, beta = loss_constants(X, y, radius=1.0)
+    return theory.ProblemSpec(L=L, beta=beta, B=1.0, dim=DIM)
+
+
+def test_mp_dsvrg_converges(stream, spec):
+    res = run_mp_dsvrg(stream, spec, m=4, b=64, T=8)
+    sub = float(stream.population_suboptimality(res.w_avg))
+    bound = theory.rate_bound_weakly_convex(spec, 64 * 4, 8, exact=False)
+    assert sub <= bound, (sub, bound)
+
+
+def test_mp_dsvrg_inner_solves_subproblem(stream, spec):
+    """With many inner iterations, the inner DSVRG loop must approach the
+    exact solution of the union minibatch prox subproblem (eq. 12)."""
+    m, b = 4, 64
+    key = jax.random.PRNGKey(3)
+    Xm, ym = stream.sample_distributed(key, m, b)
+    gamma = 2.0
+    w_prev = jnp.zeros(DIM)
+    exact = prox.exact_lsq_prox(w_prev, Xm, ym, gamma)
+
+    from repro.core.losses import least_squares
+    from repro.core.mp_dsvrg import _dsvrg_inner_spmd
+    eta = 0.3 / (spec.beta + gamma)
+    inner = jax.vmap(
+        lambda X, y: _dsvrg_inner_spmd(least_squares(), w_prev, w_prev, X, y,
+                                       gamma, eta, p=4, K=40, m=m, lam=0.0),
+        axis_name="machines")
+    z, _ = inner(Xm, ym)
+    f_exact = prox.prox_subproblem_value(exact, w_prev, Xm, ym, gamma)
+    f_z = prox.prox_subproblem_value(z[0], w_prev, Xm, ym, gamma)
+    assert float(f_z - f_exact) < 1e-3, float(f_z - f_exact)
+
+
+def test_mp_dsvrg_accounting_matches_theory(stream, spec):
+    m, b, T = 4, 64, 4
+    res = run_mp_dsvrg(stream, spec, m, b, T)
+    K = res.plan.K
+    assert res.ledger.comm_rounds == 2 * K * T
+    assert res.ledger.peak_memory_vectors == b
+    # per-machine ops: K*(b + b/p) per outer step
+    assert res.ledger.vector_ops == T * K * (b + b // res.plan.p)
+
+
+def test_mp_dane_exact_matches_union_prox(stream, spec):
+    """With exact local solves + correction, enough DANE iterations converge
+    to the exact union-minibatch prox point (quadratic => DANE converges)."""
+    m, b = 4, 64
+    key = jax.random.PRNGKey(5)
+    Xm, ym = stream.sample_distributed(key, m, b)
+    gamma = 2.0
+    w_prev = jnp.zeros(DIM)
+    exact = prox.exact_lsq_prox(w_prev, Xm, ym, gamma)
+
+    from repro.core.losses import least_squares
+    from repro.core.mp_dane import _dane_round_spmd
+    z = jnp.broadcast_to(w_prev, (m, DIM))
+    for k in range(12):
+        step = jax.vmap(
+            lambda zz, X, y: _dane_round_spmd(
+                least_squares(), zz, X, y, w_prev, w_prev, gamma, 0.0, 0.0,
+                "exact", jax.random.PRNGKey(k), 0.1, True),
+            axis_name="machines")
+        z = step(z, Xm, ym)
+    np.testing.assert_allclose(np.asarray(z[0]), np.asarray(exact), atol=1e-3)
+
+
+def test_mp_dane_converges_all_solvers(stream, spec):
+    for solver, eta in [("exact", 0.1), ("saga", 0.1), ("prox_svrg", 0.05)]:
+        res = run_mp_dane(stream, spec, m=4, b=64, T=8, local_solver=solver,
+                          eta_scale=eta)
+        sub = float(stream.population_suboptimality(res.w_avg))
+        bound = theory.rate_bound_weakly_convex(spec, 64 * 4, 8, exact=False)
+        assert sub <= bound, (solver, sub, bound)
+
+
+def test_emso_single_round_accounting(stream, spec):
+    res = run_emso(stream, spec, m=4, b=64, T=4)
+    # one-shot averaging: 1 round per outer step
+    assert res.ledger.comm_rounds == 4
+
+
+def test_minibatch_sgd_converges(stream, spec):
+    res = run_minibatch_sgd(stream, spec, m=4, b=16, T=64)
+    sub = float(stream.population_suboptimality(res.w_avg))
+    assert sub < 0.1, sub
+
+
+def test_minibatch_sgd_degrades_with_huge_minibatch(stream, spec):
+    """Figure 3 claim: at huge b (tiny T), MP beats minibatch SGD because
+    minibatch SGD cannot exploit minibatch sizes beyond O(sqrt(n))."""
+    m, b, T = 4, 2048, 2
+    sgd = run_minibatch_sgd(stream, spec, m, b, T)
+    mp = run_mp_dane(stream, spec, m, b, T, local_solver="exact")
+    sub_sgd = float(stream.population_suboptimality(sgd.w_avg))
+    sub_mp = float(stream.population_suboptimality(mp.w_avg))
+    assert sub_mp < sub_sgd, (sub_mp, sub_sgd)
+
+
+def test_acc_minibatch_sgd_converges(stream, spec):
+    res = run_acc_minibatch_sgd(stream, spec, m=4, b=32, T=32)
+    sub = float(stream.population_suboptimality(res.w_avg))
+    assert sub < 0.15, sub
+
+
+def test_single_sgd_reference(stream, spec):
+    res = run_single_sgd(stream, spec, n=4096)
+    sub = float(stream.population_suboptimality(res.w_avg))
+    assert sub < 0.05, sub
+
+
+def test_dsvrg_erm_converges(stream, spec):
+    res = run_dsvrg_erm(stream, spec, m=4, n=4096, K=20)
+    sub = float(stream.population_suboptimality(res.w_avg))
+    assert sub < 0.05, sub
+    assert res.ledger.peak_memory_vectors == 4096 // 4  # stores its shard
+
+
+def test_table1_resource_model(spec):
+    n, m = 10**6, 16
+    r_sgd = theory.table1_resources("acc_minibatch_sgd", spec, n, m)
+    r_dsvrg = theory.table1_resources("dsvrg", spec, n, m)
+    r_mp = theory.table1_resources("mp_dsvrg", spec, n, m, b=1000)
+    r_mp_max = theory.table1_resources("mp_dsvrg", spec, n, m, b=n // m)
+    # DSVRG: O(1) comm, full-shard memory
+    assert r_dsvrg["communication"] == 1
+    assert r_dsvrg["memory"] == n / m
+    # MP-DSVRG interpolates: memory = b, comm = n/(mb)
+    assert r_mp["memory"] == 1000
+    assert r_mp["communication"] == n / (m * 1000)
+    # at b_max it matches DSVRG comm/memory (up to logs)
+    assert r_mp_max["memory"] == n / m
+    assert r_mp_max["communication"] == pytest.approx(1.0)
+    # all methods are sample-optimal
+    assert r_sgd["samples"] == n
+
+
+def test_mp_dsvrg_communication_memory_tradeoff(stream, spec):
+    """Fig. 1: doubling b halves communication and doubles memory."""
+    m, total = 4, 512
+    res_small = run_mp_dsvrg(stream, spec, m, b=32, T=total // 32)
+    res_large = run_mp_dsvrg(stream, spec, m, b=128, T=total // 128)
+    # identical K per Thm 10 (same n) => comm scales as T = n/(mb)
+    assert res_small.ledger.comm_rounds > res_large.ledger.comm_rounds
+    assert res_small.ledger.peak_memory_vectors < \
+        res_large.ledger.peak_memory_vectors
+    ratio = res_small.ledger.comm_rounds / res_large.ledger.comm_rounds
+    assert ratio == pytest.approx(4.0, rel=0.3)
+
+
+def test_mp_dane_logistic_beats_sgd_at_large_b(stream, spec):
+    """App. E: on logistic loss the large-b advantage of MP-DANE holds."""
+    from benchmarks.appendix_e_logistic import LogisticStream
+    from repro.core.losses import logistic
+    ls = LogisticStream(dim=16, noise=0.0, seed=0)
+    lspec = theory.ProblemSpec(L=2.0, beta=0.5, B=2.0, dim=16)
+    b, T, m = 512, 1, 4
+    mp = run_mp_dane(ls, lspec, m, b, T, K=4, R=1, kappa=0.0,
+                     local_solver="prox_svrg", eta_scale=0.3,
+                     loss=logistic())
+    sgd = run_minibatch_sgd(ls, lspec, m, b, T, loss=logistic())
+    assert ls.population_logloss(mp.w_avg) < \
+        ls.population_logloss(sgd.w_avg)
+
+
+def test_elastic_remesh_state():
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.runtime.elastic import remesh_state
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    out = remesh_state(params, cfg, mesh, mesh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

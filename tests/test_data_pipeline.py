@@ -1,0 +1,83 @@
+"""Data pipeline: determinism, sharding, prefetch, restart-reproducibility."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import Prefetcher, ShardedBatcher
+from repro.data.synthetic import LeastSquaresStream, TokenStream
+
+
+def _sample_fn(key, n):
+    return jax.random.normal(key, (n, 4))
+
+
+def test_batcher_deterministic():
+    b1 = ShardedBatcher(_sample_fn, 8, seed=3)
+    b2 = ShardedBatcher(_sample_fn, 8, seed=3)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(np.asarray(b1.batch_at(step)),
+                                      np.asarray(b2.batch_at(step)))
+    # different steps differ
+    assert not np.array_equal(np.asarray(b1.batch_at(0)),
+                              np.asarray(b1.batch_at(1)))
+
+
+def test_batcher_shards_disjoint():
+    shards = [ShardedBatcher(_sample_fn, 8, n_shards=4, shard_index=i,
+                             seed=0) for i in range(4)]
+    batches = [np.asarray(s.batch_at(2)) for s in shards]
+    assert all(b.shape == (2, 4) for b in batches)
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(batches[i], batches[j])
+
+
+def test_restart_reproducibility():
+    """A 'restarted' consumer resumes at step k with identical data —
+    the FT property the checkpointing design relies on."""
+    b = ShardedBatcher(_sample_fn, 4, seed=9)
+    full = [np.asarray(x) for x in itertools.islice(iter(b), 6)]
+    resumed = [np.asarray(b.batch_at(s)) for s in range(3, 6)]
+    for a, c in zip(full[3:], resumed):
+        np.testing.assert_array_equal(a, c)
+
+
+def test_prefetcher_order_and_close():
+    b = ShardedBatcher(_sample_fn, 4, seed=1)
+    direct = [np.asarray(x) for x in itertools.islice(iter(b), 5)]
+    pf = Prefetcher(itertools.islice(iter(b), 5), depth=2)
+    fetched = [np.asarray(x) for x in pf]
+    assert len(fetched) == 5
+    for a, c in zip(direct, fetched):
+        np.testing.assert_array_equal(a, c)
+    pf.close()
+
+
+def test_streams_are_reproducible():
+    s = LeastSquaresStream(dim=8, seed=0)
+    X1, y1 = s.sample(jax.random.PRNGKey(5), 16)
+    X2, y2 = s.sample(jax.random.PRNGKey(5), 16)
+    np.testing.assert_array_equal(np.asarray(X1), np.asarray(X2))
+    t = TokenStream(vocab_size=64, seq_len=8, seed=0)
+    a1 = t.batch(jax.random.PRNGKey(7), 4)
+    a2 = t.batch(jax.random.PRNGKey(7), 4)
+    np.testing.assert_array_equal(np.asarray(a1[0]), np.asarray(a2[0]))
+
+
+def test_compressed_pmean_single_device():
+    from repro.distributed.collectives import (compressed_pmean, pmean_tree,
+                                               wire_bytes)
+    from repro.optim import compression as comp
+    trees = {"g": jax.random.normal(jax.random.PRNGKey(0), (2, 512,))}
+    ef = comp.init_ef({"g": trees["g"][0]})
+
+    def f(t, e):
+        return compressed_pmean(t, e, "i")
+
+    avg, ef2 = jax.vmap(f, axis_name="i", in_axes=(0, None))(trees, ef)
+    expect = np.asarray(trees["g"]).mean(0)
+    np.testing.assert_allclose(np.asarray(avg["g"][0]), expect, atol=2e-2)
+    tree = {"g": trees["g"][0]}
+    assert wire_bytes(tree, compressed=True) < wire_bytes(tree) / 3.5

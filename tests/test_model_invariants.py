@@ -1,0 +1,105 @@
+"""Model-level invariants: causality, decode/prefill equivalence, dtype."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import lm
+
+settings.register_profile("model_ci", max_examples=5, deadline=None)
+settings.load_profile("model_ci")
+
+ARCHS_CAUSAL = ["smollm-135m", "rwkv6-3b", "recurrentgemma-2b",
+                "grok-1-314b", "musicgen-medium"]
+
+
+def _toks(cfg, key, B, S):
+    if cfg.frontend == "audio":
+        return jax.random.randint(key, (B, S, cfg.n_codebooks), 0,
+                                  cfg.vocab_size)
+    return jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS_CAUSAL)
+def test_causality(arch):
+    """Changing FUTURE tokens must not change past logits — the core
+    correctness property of every mixer (attention mask, rwkv scan order,
+    rg-lru recurrence, rolling local-attention cache)."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, cut = 2, 24, 13
+    toks = _toks(cfg, jax.random.PRNGKey(1), B, S)
+    toks2 = toks.at[:, cut:].set(
+        _toks(cfg, jax.random.PRNGKey(2), B, S)[:, cut:])
+    batch1 = {"tokens": toks, "targets": toks}
+    batch2 = {"tokens": toks2, "targets": toks2}
+    l1, _ = lm.forward(params, cfg, batch1)
+    l2, _ = lm.forward(params, cfg, batch2)
+    np.testing.assert_allclose(np.asarray(l1[:, :cut], np.float32),
+                               np.asarray(l2[:, :cut], np.float32),
+                               atol=1e-4, rtol=1e-4)
+    # and the change IS visible after the cut (model isn't degenerate)
+    assert float(jnp.abs(l1[:, cut:] - l2[:, cut:]).max()) > 1e-4
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "grok-1-314b",
+                                  "musicgen-medium"])
+def test_decode_matches_prefill_attention_archs(arch):
+    """KV-cache decode must reproduce the parallel forward exactly
+    (attention-arch counterpart of the recurrent-arch test). MoE archs use
+    a high capacity factor so no token is dropped — capacity-based routing
+    otherwise differs between prefill (whole sequence competes for slots)
+    and decode (fresh buffer per step): the known train/serve discrepancy
+    of capacity-routed MoE, documented in DESIGN.md §4."""
+    cfg = get_config(arch).reduced(capacity_factor=8.0)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    toks = _toks(cfg, jax.random.PRNGKey(3), B, S)
+    logits_seq, _ = lm.forward(params, cfg,
+                               {"tokens": toks, "targets": toks})
+    state = lm.init_decode_state(cfg, B, max_len=16)
+    outs = []
+    for pos in range(S):
+        tok = toks[:, pos]
+        lg, state = lm.decode_step(params, cfg, state, tok, jnp.int32(pos))
+        outs.append(lg)
+    logits_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_seq, np.float32),
+                               np.asarray(logits_step, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@given(seed=st.integers(0, 10**6))
+def test_loss_permutation_invariance_over_batch(seed):
+    """Batch order must not change the mean loss (no cross-example
+    leakage through the MoE dispatch or normalization)."""
+    cfg = get_config("grok-1-314b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 4, 8
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    perm = jnp.array([2, 0, 3, 1])
+    batch_p = {"tokens": toks[perm], "targets": toks[perm]}
+    l1, _ = lm.train_loss(params, cfg, batch)
+    l2, _ = lm.train_loss(params, cfg, batch_p)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_vlm_prefix_sees_image():
+    """Text logits must depend on the vision prefix (prefix-LM wiring)."""
+    cfg = get_config("paligemma-3b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    s_text = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, s_text), 0,
+                              cfg.vocab_size)
+    v1 = jax.random.normal(jax.random.PRNGKey(2),
+                           (B, cfg.vision_tokens, cfg.vision_dim))
+    v2 = jax.random.normal(jax.random.PRNGKey(3),
+                           (B, cfg.vision_tokens, cfg.vision_dim))
+    l1, _ = lm.forward(params, cfg, {"tokens": toks, "vision_emb": v1})
+    l2, _ = lm.forward(params, cfg, {"tokens": toks, "vision_emb": v2})
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4

@@ -1,0 +1,98 @@
+"""Hypothesis property-based tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prox, theory
+
+D = 8
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _data(seed, n=32, d=D):
+    k = jax.random.PRNGKey(seed)
+    X = jax.random.normal(k, (n, d)) / np.sqrt(d)
+    y = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    return X, y
+
+
+@given(seed=st.integers(0, 10**6), gamma=st.floats(0.05, 50.0))
+def test_prox_is_firmly_nonexpansive(seed, gamma):
+    """||prox(a1) - prox(a2)|| <= ||a1 - a2|| for the same subproblem."""
+    X, y = _data(seed)
+    k = jax.random.PRNGKey(seed + 7)
+    a1 = jax.random.normal(k, (D,))
+    a2 = jax.random.normal(jax.random.fold_in(k, 1), (D,))
+    p1 = prox.exact_lsq_prox(a1, X, y, gamma)
+    p2 = prox.exact_lsq_prox(a2, X, y, gamma)
+    lhs = float(jnp.linalg.norm(p1 - p2))
+    rhs = float(jnp.linalg.norm(a1 - a2))
+    assert lhs <= rhs * (1 + 1e-4)
+
+
+@given(seed=st.integers(0, 10**6))
+def test_prox_gamma_monotone_distance(seed):
+    """Larger gamma pulls the prox point closer to the anchor."""
+    X, y = _data(seed)
+    a = jax.random.normal(jax.random.PRNGKey(seed + 3), (D,))
+    dists = []
+    for gamma in [0.1, 1.0, 10.0, 100.0]:
+        p = prox.exact_lsq_prox(a, X, y, gamma)
+        dists.append(float(jnp.linalg.norm(p - a)))
+    assert all(d1 >= d2 - 1e-5 for d1, d2 in zip(dists, dists[1:])), dists
+
+
+@given(seed=st.integers(0, 10**6), gamma=st.floats(0.1, 20.0))
+def test_prox_optimality_vs_random_points(seed, gamma):
+    """The prox point minimizes f_t over random competitors."""
+    X, y = _data(seed)
+    a = jax.random.normal(jax.random.PRNGKey(seed + 5), (D,))
+    p = prox.exact_lsq_prox(a, X, y, gamma)
+    f_p = float(prox.prox_subproblem_value(p, a, X, y, gamma))
+    for i in range(5):
+        w = jax.random.normal(jax.random.PRNGKey(seed + 100 + i), (D,))
+        assert f_p <= float(prox.prox_subproblem_value(w, a, X, y, gamma)) \
+            + 1e-5
+
+
+@given(seed=st.integers(0, 10**6), gamma=st.floats(0.1, 20.0))
+def test_implicit_gradient_identity(seed, gamma):
+    """Eq. (5): the prox point is the implicit-gradient fixed point."""
+    X, y = _data(seed)
+    a = jax.random.normal(jax.random.PRNGKey(seed + 9), (D,))
+    p = prox.exact_lsq_prox(a, X, y, gamma)
+    res = prox.sgd_equivalence_residual(p, a, X, y, gamma)
+    assert float(jnp.linalg.norm(res)) < 1e-3 * max(1.0, float(
+        jnp.linalg.norm(p)))
+
+
+@given(b=st.integers(1, 4096), mult=st.integers(2, 8))
+def test_rate_bound_improves_with_bT(b, mult):
+    spec = theory.ProblemSpec(L=1.0, beta=1.0, B=1.0)
+    r1 = theory.rate_bound_weakly_convex(spec, b, 8)
+    r2 = theory.rate_bound_weakly_convex(spec, b * mult, 8)
+    assert r2 < r1
+
+
+@given(n=st.integers(10**3, 10**8), m=st.sampled_from([4, 16, 64]))
+def test_mp_dsvrg_plan_invariants(n, m):
+    spec = theory.ProblemSpec(L=1.0, beta=1.0, B=1.0)
+    b = max(1, n // (m * 16))
+    plan = theory.mp_dsvrg_plan(spec, n, m, b)
+    assert plan.T >= 1 and plan.K >= 1 and plan.p >= 1
+    assert plan.p * plan.batch <= b
+    # communication decreases in b (at fixed n, m): T = n/(bm)
+    plan2 = theory.mp_dsvrg_plan(spec, n, m, 2 * b)
+    assert plan2.comm_rounds <= plan.comm_rounds
+
+
+@given(seed=st.integers(0, 10**6), radius=st.floats(0.1, 10.0))
+def test_projection_properties(seed, radius):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (D,)) * 5.0
+    p = prox.project_l2_ball(w, radius)
+    assert float(jnp.linalg.norm(p)) <= radius * (1 + 1e-5)
+    # idempotent
+    p2 = prox.project_l2_ball(p, radius)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p2), atol=1e-6)
