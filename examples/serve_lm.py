@@ -10,6 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch.serve import generate
@@ -32,7 +33,7 @@ def main():
     else:
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, 8), 0, cfg.vocab_size)
-    with jax.set_mesh(make_host_mesh()):
+    with compat.set_mesh(make_host_mesh()):
         t0 = time.time()
         toks = generate(params, cfg, prompts, args.gen, temperature=0.8)
         dt = time.time() - t0

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the full test suite from the repo root.
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh -m 'not slow'
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -17,7 +17,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional dep: fall back to stdlib zlib
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    # sniff the frame magic so checkpoints stay readable across installs
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "'zstandard' package is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree):
@@ -37,11 +60,11 @@ def _encode(leaves) -> bytes:
             payload.append({"dtype": str(arr.dtype), "shape": arr.shape,
                             "data": arr.tobytes()})
     raw = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(raw)
+    return _compress(raw)
 
 
 def _decode(blob: bytes):
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    raw = _decompress(blob)
     payload = msgpack.unpackb(raw, raw=False)
     leaves = []
     for item in payload:

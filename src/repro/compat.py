@@ -1,0 +1,55 @@
+"""Version shims for JAX APIs that moved between releases.
+
+The codebase is written against the current public API (``jax.set_mesh``,
+``jax.shard_map``, ``pltpu.CompilerParams``); older installs expose the same
+functionality under different names (``Mesh.__enter__`` as the ambient-mesh
+context, ``jax.experimental.shard_map.shard_map`` with ``check_rep``/``auto``,
+``pltpu.TPUCompilerParams``). Every call site routes through this module so
+the rest of the tree never branches on the JAX version.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh, so bare
+    PartitionSpecs in with_sharding_constraint / jit resolve against it."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    # jax<=0.4.x: Mesh is itself the ambient-mesh context manager
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """`jax.shard_map` with the current keyword API.
+
+    On older JAX, translates to `jax.experimental.shard_map.shard_map`:
+    `check_vma` -> `check_rep`, and `axis_names` (the manual axes) -> `auto`
+    (its complement in the mesh).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """`pltpu.CompilerParams(...)` (renamed from TPUCompilerParams)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

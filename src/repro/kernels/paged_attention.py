@@ -1,0 +1,113 @@
+"""Paged decode attention (block-table gather), TPU Pallas.
+
+Single-token decode where each sequence's KV cache lives in fixed-size
+physical blocks of a shared pool; a per-sequence block table maps logical
+block j to its physical block id. The block table and per-sequence context
+lengths ride in as scalar-prefetch operands so the K/V BlockSpec index maps
+can gather physical blocks directly — no head-expansion or cache
+defragmentation copies ever touch HBM.
+
+Grid: (B, KV, M) with the logical-block axis innermost ("arbitrary"
+semantics — sequential per (seq, kv_head), carrying online-softmax stats in
+VMEM scratch). Blocks at or past the context length are skipped entirely,
+so decode attention reads ceil(ctx/bs) blocks per sequence, not the
+allocation bound M.
+
+GQA: queries are laid out (B, KV, group, hd); each grid step contracts the
+whole query group against one (bs, hd) K/V block — kv_head indexing happens
+in the BlockSpec maps, mirroring flash_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale, bs):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = cl_ref[b]
+
+    @pl.when(j * bs < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (group, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = (q @ k.T) * scale                            # (group, bs)
+        kpos = j * bs + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < ctx, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
+                    interpret: bool = True):
+    """q: (B, H, hd); k_pool/v_pool: (N, bs, KV, hd);
+    block_tables: (B, M) int32; ctx_lens: (B,) int32 valid-token counts
+    (rows with ctx_lens == 0 return zeros). Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    _, bs, KV, _ = k_pool.shape
+    group = H // KV
+    M = block_tables.shape[1]
+    qg = q.reshape(B, KV, group, hd)
+
+    def q_map(b, kv, j, bt_ref, cl_ref):
+        return (b, kv, 0, 0)
+
+    def kv_map(b, kv, j, bt_ref, cl_ref):
+        return (bt_ref[b, j], 0, kv, 0)
+
+    kernel = functools.partial(_kernel, scale=hd**-0.5, bs=bs)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, M),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd), q_map),
+                pl.BlockSpec((1, bs, 1, hd), kv_map),
+                pl.BlockSpec((1, bs, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd), q_map),
+            scratch_shapes=[
+                # m, l, acc live in VMEM across the logical-block sweep
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, ctx_lens, qg, k_pool, v_pool)
+    return out.reshape(B, H, hd)

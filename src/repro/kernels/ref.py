@@ -34,6 +34,29 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return o.reshape(B, H, Sq, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens):
+    """Single-token decode attention through a paged KV cache.
+
+    q: (B, H, hd) current-token queries; k_pool/v_pool: (N, bs, KV, hd)
+    physical blocks; block_tables: (B, M) int32 block ids per sequence;
+    ctx_lens: (B,) int32 number of valid tokens (0 => output row is zeros).
+    GQA via head grouping. Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    group = H // KV
+    k = k_pool[block_tables].reshape(B, -1, KV, hd).astype(jnp.float32)
+    v = v_pool[block_tables].reshape(B, -1, KV, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, KV, group, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k) * hd**-0.5
+    valid = jnp.arange(k.shape[1])[None, :] < ctx_lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v).reshape(B, H, hd)
+    o = jnp.where(ctx_lens[:, None, None] > 0, o, 0.0)
+    return o.astype(q.dtype)
+
+
 def rwkv6_ref(r, k, v, w, u, s0=None):
     """RWKV6 recurrence. r/k/v: (B, H, T, N); w: (B, H, T, N) decays in
     (0,1); u: (H, N) bonus. Returns (out (B,H,T,N), s_T (B,H,N,N))."""

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 
 def _kernel(a_ref, x_ref, h0_ref, y_ref, hout_ref, h_ref, *, tc):
     ci = pl.program_id(2)
@@ -61,7 +63,7 @@ def rglru_scan(a, x, h0=None, *, tc: int = 128, cb: int = 256,
                    jax.ShapeDtypeStruct((B, C), jnp.float32)),
         scratch_shapes=[pltpu.VMEM((cb,), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(a, x, h0)
     return y, h_fin

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_ref, *,
             tc):
@@ -69,7 +71,7 @@ def rwkv6_scan(r, k, v, w, u, *, tc: int = 64, interpret: bool = True):
                    jax.ShapeDtypeStruct((B, H, N, N), jnp.float32)),
         scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(r, k, v, w, u)
     return y, s_fin

@@ -27,6 +27,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config, list_archs
 from repro.distributed import sharding as shd
 from repro.launch import (cost_model, hlo_analysis, inputs as inputs_lib,
@@ -206,7 +207,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
         # production aliasing; otherwise memory doubles
         donate = {"train": (0, 1), "decode": (1,),
                   "prefill": ()}[shape.kind]
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

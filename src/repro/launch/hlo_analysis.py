@@ -53,8 +53,10 @@ _GROUP_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+[\w\-]+\(")
+# operands may carry inline types: dot(f32[128,128]{1,0} %lhs, ... %rhs)
 _DOT_RE = re.compile(
-    r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\)(.*)$")
+    r"dot\(\s*(?:([a-z]\w*\[[\d,]*\])(?:\{[\d,]*\})?\s+)?%?([\w.\-]+)\s*,"
+    r"\s*(?:[a-z]\w*\[[\d,]*\](?:\{[\d,]*\})?\s+)?%?([\w.\-]+)\s*\)(.*)$")
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _COLL_RE = re.compile(
     r"=\s*(\(?[\w\[\],{}\s/*=\d]+?\)?)\s+"
@@ -145,8 +147,10 @@ def _analyze_comp(name: str, lines) -> _Comp:
                 out_elems = 1
                 for d in out_dims:
                     out_elems *= d
-                lhs_shape = shapes.get(md.group(1)) or []
-                mcd = _CDIMS_RE.search(md.group(3))
+                lhs_shape = ((_first_shape_dims(md.group(1))
+                              if md.group(1) else None)
+                             or shapes.get(md.group(2)) or [])
+                mcd = _CDIMS_RE.search(md.group(4))
                 cdims = ([int(x) for x in mcd.group(1).split(",") if x]
                          if mcd else [])
                 csize = 1

@@ -1,19 +1,39 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Serving CLI: continuous-batching engine (default) or the legacy
+fixed-batch path, with an open-loop synthetic traffic generator and
+throughput/latency telemetry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --batch 4 --prompt-len 16 --gen 32
+        --requests 32 --slots 8 --prompt-len 64 --max-new 8 32 --rate 50
+
+    # legacy single-batch path (token-by-token cache priming; kept as the
+    # benchmark baseline and for the audio/vision frontends):
+    PYTHONPATH=src python -m repro.launch.serve --mode naive --batch 4
+
+`generate()` below is the seed serving path, unchanged: it primes the KV
+cache one token at a time and decodes a fixed batch in lockstep. The
+engine replaces it for sustained traffic — see repro.serving.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
+from repro.serving.engine import (Request, ServingEngine, summarize,
+                                  synthetic_requests)
+
+
+# module-level so repeated generate() calls with the same shapes reuse the
+# compiled step (cfg is a frozen dataclass => a valid static argument)
+_decode_step_jit = jax.jit(lm.decode_step, static_argnums=(1,))
 
 
 def generate(params, cfg, prompts, gen_len: int, *, temperature: float = 0.0,
@@ -24,7 +44,9 @@ def generate(params, cfg, prompts, gen_len: int, *, temperature: float = 0.0,
     P = prompts.shape[1]
     max_len = P + gen_len + 1
     state = lm.init_decode_state(cfg, B, max_len=max_len)
-    step = jax.jit(lambda s, t, p: lm.decode_step(params, cfg, s, t, p))
+
+    def step(s, t, p):
+        return _decode_step_jit(params, cfg, s, t, p)
 
     # prime the cache on the prompt
     logits = None
@@ -46,35 +68,69 @@ def generate(params, cfg, prompts, gen_len: int, *, temperature: float = 0.0,
     return jnp.stack(out, axis=1)
 
 
+def _run_engine(args, cfg, params):
+    rate = float("inf") if args.rate <= 0 else args.rate
+    reqs = synthetic_requests(
+        args.requests, vocab_size=cfg.vocab_size,
+        prompt_len=args.prompt_len, max_new=tuple(args.max_new),
+        rate=rate, seed=args.seed)
+    engine = ServingEngine(
+        params, cfg, num_slots=args.slots, block_size=args.block_size,
+        max_seq_len=args.prompt_len + max(args.max_new) + 1,
+        temperature=args.temperature, seed=args.seed)
+    done = engine.run(reqs)
+    stats = summarize(done, engine.wall_time, engine)
+    print(json.dumps(stats, indent=1))
+    if done:
+        sample = min(done, key=lambda c: c.rid)
+        print(f"sample (req {sample.rid}): {sample.tokens[:16]}")
+
+
+def _run_naive(args, cfg, params):
+    if cfg.frontend == "audio":
+        prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                     (args.batch, args.prompt_len,
+                                      cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size)
+    t0 = time.time()
+    tokens = generate(params, cfg, prompts, max(args.max_new),
+                      temperature=args.temperature)
+    dt = time.time() - t0
+    n_tok = tokens.shape[0] * tokens.shape[1]
+    print(f"generated {tokens.shape} in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s batched)")
+    print(np.asarray(tokens[0][:16]))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mode", default="engine", choices=["engine", "naive"])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixed batch for --mode naive")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, nargs=2, default=(8, 32),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate req/s (<=0: all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     mesh = make_host_mesh()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    if cfg.frontend == "audio":
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (args.batch, args.prompt_len,
-                                      cfg.n_codebooks), 0, cfg.vocab_size)
-    else:
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (args.batch, args.prompt_len), 0,
-                                     cfg.vocab_size)
-    with jax.set_mesh(mesh):
-        t0 = time.time()
-        tokens = generate(params, cfg, prompts, args.gen,
-                          temperature=args.temperature)
-        dt = time.time() - t0
-    n_tok = tokens.shape[0] * tokens.shape[1]
-    print(f"generated {tokens.shape} in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s batched)")
-    print(tokens[0][:16])
+    with compat.set_mesh(mesh):
+        if args.mode == "engine":
+            _run_engine(args, cfg, params)
+        else:
+            _run_naive(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs import get_config
 from repro.data.synthetic import TokenStream
@@ -64,7 +65,7 @@ def train(arch: str, steps: int, *, optimizer: str = "mbprox",
 
     losses = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for step in range(start, steps):
             key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
             batch = make_batch(cfg, stream, key, batch_size, n_micro)

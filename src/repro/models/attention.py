@@ -163,8 +163,11 @@ def bisect_causal_attention(q, k, v, *, depth: int = 3):
 
 
 def attention_block(params, x, positions, cfg, *, window: int = 0,
-                    prefix_len: int = 0):
-    """Full attention sub-layer (projections + chunked attention)."""
+                    prefix_len: int = 0, return_kv: bool = False):
+    """Full attention sub-layer (projections + chunked attention).
+
+    return_kv=True also returns the rope'd (k, v) — exactly what the decode
+    cache stores — so single-shot prefill can seed serving KV caches."""
     B, S, D = x.shape
     q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                    positions, cfg.rope_theta)
@@ -174,7 +177,10 @@ def attention_block(params, x, positions, cfg, *, window: int = 0,
     else:
         o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk,
                                      window=window, prefix_len=prefix_len)
-    return o.reshape(B, S, -1) @ params["wo"]
+    out = o.reshape(B, S, -1) @ params["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -215,4 +221,50 @@ def decode_attention_block(params, x, cache, pos, cfg, *, window: int = 0):
     s = jnp.where(valid[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = _gqa_out(p, cv).reshape(B, 1, -1)
+    return (o @ params["wo"]).astype(x.dtype), {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------------
+# Paged KV-cache decode (continuous-batching serving)
+# ----------------------------------------------------------------------------
+
+def paged_decode_attention_block(params, x, cache, positions, block_tables,
+                                 cfg, *, window: int = 0):
+    """One-token decode through a paged KV cache (serving/kv_cache.py).
+
+    x: (B, 1, D) — one token per slot, B = number of decode slots;
+    cache k/v: (num_blocks, block_size, KV, hd) physical block pools shared
+    by all slots; positions: (B,) int32 per-slot token positions (ragged —
+    each slot is at its own depth); block_tables: (B, max_blocks) int32.
+
+    The current token's K/V is scattered into (block_tables[b, p//bs],
+    p % bs); scores are gathered back through the table. Slots whose table
+    rows point at the reserved null block write garbage there and mask it
+    out — inactive slots cost nothing but the batch lane.
+
+    window > 0 masks to the trailing `window` positions (local attention
+    keeps the full paged history; the mask, not a rolling buffer, bounds
+    the receptive field). This is the pure-jnp oracle for
+    kernels/paged_attention.py. Returns (out, new_cache).
+    """
+    B, _, D = x.shape
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                   positions[:, None], cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    blk = block_tables[jnp.arange(B), positions // bs]
+    off = positions % bs
+    ck = cache["k"].at[blk, off].set(k[:, 0])
+    cv = cache["v"].at[blk, off].set(v[:, 0])
+
+    gk = ck[block_tables].reshape(B, -1, *ck.shape[2:])  # (B, M*bs, KV, hd)
+    gv = cv[block_tables].reshape(B, -1, *cv.shape[2:])
+    s = _gqa_scores(q, gk) * (cfg.head_dim ** -0.5)      # (B, H, 1, M*bs)
+    kpos = jnp.arange(gk.shape[1])
+    valid = kpos[None, :] <= positions[:, None]
+    if window > 0:
+        valid = jnp.logical_and(valid,
+                                kpos[None, :] > positions[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, gv).reshape(B, 1, -1)
     return (o @ params["wo"]).astype(x.dtype), {"k": ck, "v": cv}

@@ -10,8 +10,12 @@ Entry points:
   init_params(key, cfg)
   train_loss(params, cfg, batch)              -> loss, metrics
   forward(params, cfg, batch)                 -> logits            (prefill)
+  prefill(params, cfg, batch)                 -> logits, kv cache  (serving)
   init_decode_state(cfg, batch, max_len)      -> state pytree
   decode_step(params, cfg, state, tokens, pos)-> logits, new state (decode)
+  decode_step_paged(params, cfg, state, tokens, positions, block_tables)
+      -> logits, new state    (continuous-batching decode over paged KV;
+         see serving/ for slot scheduling and block allocation)
 """
 from __future__ import annotations
 
@@ -79,21 +83,34 @@ def _init_block(key, cfg: ModelConfig, kind: str):
 
 
 def _apply_block_seq(params, kind: str, x, positions, cfg: ModelConfig,
-                     state=None, prefix_len: int = 0):
-    """Sequence form (train / prefill). Returns (x, new_state, aux)."""
+                     state=None, prefix_len: int = 0,
+                     collect_kv: bool = False):
+    """Sequence form (train / prefill). Returns (x, new_state, aux).
+
+    collect_kv=True makes attention layers return their rope'd K/V as
+    new_state (the decode-cache contents) so `prefill` can seed serving
+    caches in one pass; recurrent layers already return final states."""
     aux = {}
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_state = state
     if kind in ("attn", "attn_local"):
         window = cfg.window if kind == "attn_local" else 0
         o = attention.attention_block(params["attn"], h, positions, cfg,
-                                      window=window, prefix_len=prefix_len)
+                                      window=window, prefix_len=prefix_len,
+                                      return_kv=collect_kv)
+        if collect_kv:
+            o, (k_seq, v_seq) = o
+            new_state = {"k": k_seq, "v": v_seq}
         x = x + o
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
     elif kind == "moe":
         o = attention.attention_block(params["attn"], h, positions, cfg,
-                                      prefix_len=prefix_len)
+                                      prefix_len=prefix_len,
+                                      return_kv=collect_kv)
+        if collect_kv:
+            o, (k_seq, v_seq) = o
+            new_state = {"k": k_seq, "v": v_seq}
         x = x + o
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         o2, aux = moe_lib.moe_block(params["moe"], h2, cfg,
@@ -204,12 +221,19 @@ def _embed_inputs(params, cfg: ModelConfig, batch):
 
 
 def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
-                    remat: bool = True):
+                    remat: bool = True, collect_kv: bool = False):
+    """Runs prefix layers + the superblock scan. Returns (h, aux, states);
+    states is the per-layer decode cache (see _apply_block_seq collect_kv)
+    when collect_kv=True, else None — the scan carry/ys stay identical to
+    the train path in that case."""
     aux_acc = {"moe_aux": 0.0, "moe_zloss": 0.0}
 
+    prefix_states = []
     for p, kind in zip(params["prefix"], cfg.prefix_pattern):
-        h, _, aux = _apply_block_seq(p, kind, h, positions, cfg,
-                                     prefix_len=prefix_len)
+        h, st, aux = _apply_block_seq(p, kind, h, positions, cfg,
+                                      prefix_len=prefix_len,
+                                      collect_kv=collect_kv)
+        prefix_states.append(st)
         for k in aux:
             aux_acc[k] = aux_acc[k] + aux[k]
 
@@ -218,13 +242,17 @@ def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
         h = _pin_act(h)
         aux_s = {"moe_aux": jnp.zeros((), jnp.float32),
                  "moe_zloss": jnp.zeros((), jnp.float32)}
+        states = {}
         for pi, kind in enumerate(cfg.block_pattern):
-            h, _, aux = _apply_block_seq(block_params[f"p{pi}"], kind, h,
-                                         positions, cfg,
-                                         prefix_len=prefix_len)
+            h, st, aux = _apply_block_seq(block_params[f"p{pi}"], kind, h,
+                                          positions, cfg,
+                                          prefix_len=prefix_len,
+                                          collect_kv=collect_kv)
+            if collect_kv:
+                states[f"p{pi}"] = st
             for k in aux:
                 aux_s[k] = aux_s[k] + aux[k]
-        return h, aux_s
+        return h, ((aux_s, states) if collect_kv else aux_s)
 
     if remat:
         # 'dots' saves matmul outputs so backward skips the re-forward —
@@ -235,10 +263,13 @@ def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
         fn = jax.checkpoint(superblock, policy=policy)
     else:
         fn = superblock
-    h, auxs = lax.scan(lambda c, p: fn(c, p), h, params["blocks"])
+    h, ys = lax.scan(lambda c, p: fn(c, p), h, params["blocks"])
+    auxs, block_states = ys if collect_kv else (ys, None)
     for k in aux_acc:
         aux_acc[k] = aux_acc[k] + (auxs[k].sum() if k in auxs else 0.0)
-    return h, aux_acc
+    states = ({"prefix": prefix_states, "blocks": block_states}
+              if collect_kv else None)
+    return h, aux_acc, states
 
 
 def forward(params, cfg: ModelConfig, batch, remat: bool = False):
@@ -246,8 +277,8 @@ def forward(params, cfg: ModelConfig, batch, remat: bool = False):
     text region only."""
     params = cast_params(params, cfg)
     h, positions, prefix_len = _embed_inputs(params, cfg, batch)
-    h, aux = _run_blocks_seq(params, cfg, h, positions, prefix_len,
-                             remat=remat)
+    h, aux, _ = _run_blocks_seq(params, cfg, h, positions, prefix_len,
+                                remat=remat)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     if cfg.frontend == "vision":
         h = h[:, prefix_len:]
@@ -267,6 +298,30 @@ def _head(params, cfg: ModelConfig, h):
         B, S, D = h.shape
         return (h @ head).reshape(B, S, cfg.n_codebooks, cfg.vocab_size)
     return h @ head
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Single-shot chunked prefill: one jit call over the whole prompt.
+
+    Returns (logits (B, S, V), cache) where `cache` mirrors the
+    init_decode_state layer tree: attention layers hold their rope'd
+    {"k","v"} of shape (B, S, KV, hd) (stacked layers carry a leading
+    n_super axis from the scan), recurrent layers hold their final states.
+    serving/kv_cache.load_prefill scatters this into paged slot state.
+
+    Replaces the seed's token-by-token cache priming loop: S sequential
+    decode_step dispatches (each a (B,1,D) matmul) collapse into one
+    chunked-causal forward with MXU-shaped matmuls.
+    """
+    params = cast_params(params, cfg)
+    h, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    h, _, cache = _run_blocks_seq(params, cfg, h, positions, prefix_len,
+                                  remat=False, collect_kv=True)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "vision":
+        h = h[:, prefix_len:]
+    logits = _head(params, cfg, h)
+    return logits, cache
 
 
 def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
@@ -378,6 +433,71 @@ def decode_step(params, cfg: ModelConfig, state, tokens, pos):
         for pi, kind in enumerate(cfg.block_pattern):
             h, st = _apply_block_step(block_params[f"p{pi}"], kind, h, pos,
                                       cfg, block_state[f"p{pi}"])
+            new_state[f"p{pi}"] = st
+        return h, new_state
+
+    h, new_blocks = lax.scan(superblock, h,
+                             (params["blocks"], state["blocks"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, cfg, h)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+# ----------------------------------------------------------------------------
+# Paged decode (continuous-batching serving: per-slot ragged positions)
+# ----------------------------------------------------------------------------
+
+def _apply_block_step_paged(params, kind: str, x, positions,
+                            cfg: ModelConfig, state, block_tables):
+    """One-token step against paged attention state. x: (B,1,D);
+    positions: (B,) per-slot. Non-attention layers keep slot-indexed dense
+    state (O(B) per layer) and ignore positions."""
+    if kind in ("attn", "attn_local", "moe"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        window = cfg.window if kind == "attn_local" else 0
+        o, new_cache = attention.paged_decode_attention_block(
+            params["attn"], h, state, positions, block_tables, cfg,
+            window=window)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe_lib.moe_block(params["moe"], h2, cfg,
+                                      kind=cfg.mlp_kind)
+            x = x + o2
+        else:
+            x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        return x, new_cache
+    # rwkv / rec: position-independent recurrences; reuse the dense step
+    return _apply_block_step(params, kind, x, 0, cfg, state)
+
+
+def decode_step_paged(params, cfg: ModelConfig, state, tokens, positions,
+                      block_tables):
+    """One decode iteration for a slot batch. tokens: (B,) int32;
+    positions: (B,) int32 per-slot token positions (ragged — slots decode
+    independently); block_tables: (B, max_blocks) int32.
+    Returns (logits (B, V), new_state)."""
+    params = cast_params(params, cfg)
+    h = jnp.take(params["embed"], tokens[:, None],
+                 axis=0).astype(cfg.act_dtype)
+
+    new_prefix = []
+    for p, kind, st in zip(params["prefix"], cfg.prefix_pattern,
+                           state["prefix"]):
+        h, st_new = _apply_block_step_paged(p, kind, h, positions, cfg, st,
+                                            block_tables)
+        new_prefix.append(st_new)
+
+    def superblock(h, xs):
+        block_params, block_state = xs
+        block_params = _pin_block(block_params)
+        h = _pin_act(h)
+        new_state = {}
+        for pi, kind in enumerate(cfg.block_pattern):
+            h, st = _apply_block_step_paged(block_params[f"p{pi}"], kind, h,
+                                            positions, cfg,
+                                            block_state[f"p{pi}"],
+                                            block_tables)
             new_state[f"p{pi}"] = st
         return h, new_state
 

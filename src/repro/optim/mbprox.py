@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.optim.optimizers import Optimizer, sgd
 
 
@@ -142,10 +143,9 @@ def make_mbprox_step(loss_fn: Callable, mp_cfg: MBProxConfig, mesh,
 
     # --- 'local' variant: shard_map manual over dp axes, auto over model ---
     def step(params, inner_state, batch, lr):
-        auto = frozenset(a for a in mesh.axis_names if a not in dp_axes)
         batch_spec = jax.tree.map(lambda _: P(None, dp_axes), batch)
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             local_subproblem,
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params),

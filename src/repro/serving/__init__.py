@@ -1,0 +1,14 @@
+"""Continuous-batching serving subsystem.
+
+`engine.ServingEngine` — slot-scheduled continuous batching over a paged
+KV cache (`kv_cache`): requests enter a queue, the scheduler admits them
+into free decode slots, finished sequences are evicted and replaced
+mid-flight so the decode batch stays full under sustained load. Cache
+memory scales with live tokens (blocks), not batch x max_len.
+"""
+from repro.serving.engine import (Completion, Request, ServingEngine,
+                                  summarize, synthetic_requests)
+from repro.serving.kv_cache import BlockAllocator, init_paged_state
+
+__all__ = ["ServingEngine", "Request", "Completion", "synthetic_requests",
+           "summarize", "BlockAllocator", "init_paged_state"]

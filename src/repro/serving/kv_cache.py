@@ -1,0 +1,144 @@
+"""Paged KV cache: fixed-size physical blocks + per-sequence block tables.
+
+The seed decode path allocates (batch, max_len, KV, hd) per layer — memory
+scales with the worst case whether or not tokens exist. Here every layer's
+cache is a pool of `num_blocks` blocks of `block_size` tokens; a sequence
+occupying `n` tokens holds ceil(n / block_size) blocks, found through its
+block-table row. Memory scales with LIVE tokens across all slots — the
+serving-side analogue of the paper's hold-a-minibatch memory accounting
+(cache capacity is a token budget, not a batch x max_len rectangle).
+
+Block 0 is reserved as the null sink: inactive decode slots point their
+table rows at it, so the always-full-batch decode step has somewhere
+harmless to write. The allocator never hands it out.
+
+Layer-state layout (mirrors models/lm.init_decode_state):
+  attention layers   {"k","v"}: (num_blocks, block_size, KV, hd) pools,
+                     stacked layers carry a leading n_super axis;
+  recurrent layers   slot-indexed dense state, (num_slots, ...) per leaf —
+                     O(num_slots), no paging needed.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+NULL_BLOCK = 0
+
+_ATTN_KINDS = ("attn", "attn_local", "moe")
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical block pool.
+
+    Invariants (tested under random admit/evict churn):
+      * a block is owned by at most one sequence at a time,
+      * alloc returns None (not a partial grant) when short,
+      * freeing unowned blocks / the null block raises.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._used: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n blocks, or None if the pool can't cover the request."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the reserved null block")
+            if b not in self._used:
+                raise ValueError(f"double free / unowned block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+def init_paged_state(cfg: ModelConfig, num_slots: int, num_blocks: int,
+                     block_size: int):
+    """Paged decode-state pytree (same layer tree as init_decode_state)."""
+    dt = cfg.act_dtype
+
+    def layer_state(kind):
+        if kind in _ATTN_KINDS:
+            shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        return lm._init_block_state(cfg, kind, num_slots, 0, dt)
+
+    state = {"prefix": [layer_state(k) for k in cfg.prefix_pattern]}
+    blocks = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        one = layer_state(kind)
+        blocks[f"p{pi}"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_super,) + x.shape, x.dtype), one)
+    state["blocks"] = blocks
+    return state
+
+
+def paged_bytes(cfg: ModelConfig, num_blocks: int, block_size: int) -> int:
+    """Attention-cache bytes of the pool (the memory the paging bounds)."""
+    n_attn = (sum(k in _ATTN_KINDS for k in cfg.prefix_pattern)
+              + cfg.n_super * sum(k in _ATTN_KINDS
+                                  for k in cfg.block_pattern))
+    per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * cfg.act_dtype.itemsize
+    return n_attn * num_blocks * block_size * per_tok
+
+
+def load_prefill(cfg: ModelConfig, state, cache, slot, table_row,
+                 block_size: int):
+    """Scatter one sequence's prefill cache (lm.prefill, batch=1) into the
+    paged slot state.
+
+    `slot` (int32 scalar) and `table_row` ((max_blocks,) int32) are traced,
+    so one jitted instance serves every slot; the prompt length is static
+    from `cache` leaf shapes. Attention K/V of prompt position p lands in
+    physical block table_row[p // block_size], offset p % block_size;
+    recurrent final states land at the slot index.
+    """
+    def attn_positions(n_tok):
+        pos = jnp.arange(n_tok)
+        return table_row[pos // block_size], pos % block_size
+
+    def load_layer(kind, st, ca, stacked):
+        if kind in _ATTN_KINDS:
+            # ca k/v: (B=1, P, KV, hd), stacked: (n_super, 1, P, KV, hd)
+            n_tok = ca["k"].shape[2] if stacked else ca["k"].shape[1]
+            blk, off = attn_positions(n_tok)
+            if stacked:
+                return {"k": st["k"].at[:, blk, off].set(ca["k"][:, 0]),
+                        "v": st["v"].at[:, blk, off].set(ca["v"][:, 0])}
+            return {"k": st["k"].at[blk, off].set(ca["k"][0]),
+                    "v": st["v"].at[blk, off].set(ca["v"][0])}
+        if stacked:
+            return jax.tree.map(lambda s, c: s.at[:, slot].set(c[:, 0]),
+                                st, ca)
+        return jax.tree.map(lambda s, c: s.at[slot].set(c[0]), st, ca)
+
+    new_prefix = [load_layer(kind, st, ca, False)
+                  for kind, st, ca in zip(cfg.prefix_pattern,
+                                          state["prefix"], cache["prefix"])]
+    new_blocks = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        key = f"p{pi}"
+        new_blocks[key] = load_layer(kind, state["blocks"][key],
+                                     cache["blocks"][key], True)
+    return {"prefix": new_prefix, "blocks": new_blocks}

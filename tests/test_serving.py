@@ -1,0 +1,240 @@
+"""Serving subsystem: paged-attention kernel vs oracle, block-allocator
+invariants under churn, and engine outputs vs the legacy generate() path."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+from repro.launch.serve import generate
+from repro.models import attention, lm
+from repro.serving.engine import Request, ServingEngine, synthetic_requests
+from repro.serving.kv_cache import BlockAllocator
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(i, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Pallas paged-attention kernel vs the jnp oracle
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,hd,bs,M", [
+    (2, 4, 4, 32, 8, 3),     # MHA
+    (3, 4, 2, 64, 16, 4),    # GQA 2:1
+    (1, 8, 1, 128, 8, 2),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel_sweep(B, H, KV, hd, bs, M, dtype):
+    N = B * M + 1
+    q = _rand(1, (B, H, hd), dtype)
+    kp = _rand(2, (N, bs, KV, hd), dtype)
+    vp = _rand(3, (N, bs, KV, hd), dtype)
+    # disjoint tables; ragged context lengths incl. a partial last block
+    bt = (1 + jnp.arange(B * M, dtype=jnp.int32)).reshape(B, M)
+    cl = jnp.asarray([(i * 7 + 3) % (M * bs) + 1 for i in range(B)],
+                     jnp.int32)
+    out = paged_attention(q, kp, vp, bt, cl)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, cl)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_attention_kernel_empty_slot():
+    """ctx_len == 0 lanes (idle decode slots) must return zeros, not NaN."""
+    q = _rand(1, (2, 4, 32))
+    kp = _rand(2, (5, 8, 2, 32))
+    vp = _rand(3, (5, 8, 2, 32))
+    bt = jnp.array([[1, 2], [0, 0]], jnp.int32)
+    cl = jnp.array([9, 0], jnp.int32)
+    out = np.asarray(paged_attention(q, kp, vp, bt, cl))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[1], 0.0)
+    expect = np.asarray(ref.paged_attention_ref(q, kp, vp, bt, cl))
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_model_path_matches_dense_decode():
+    """paged_decode_attention_block == decode_attention_block on the same
+    history (the paged layout must be a pure re-indexing)."""
+    cfg = get_config("smollm-135m").reduced()
+    B, pos, bs, M = 2, 10, 4, 4
+    S_max = M * bs
+    params = attention.init_attention(jax.random.fold_in(KEY, 9),
+                                      cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim,
+                                      jnp.float32)
+    x = _rand(4, (B, 1, cfg.d_model), scale=0.3)
+    hist_k = _rand(5, (B, S_max, cfg.n_kv_heads, cfg.head_dim))
+    hist_v = _rand(6, (B, S_max, cfg.n_kv_heads, cfg.head_dim))
+    mask = (jnp.arange(S_max) < pos)[None, :, None, None]
+    dense = {"k": hist_k * mask, "v": hist_v * mask}
+    out_d, _ = attention.decode_attention_block(params, x, dense,
+                                                jnp.int32(pos), cfg)
+    # same history scattered into pools through a shuffled block table
+    perm = np.array([[3, 1, 4, 2], [7, 5, 8, 6]], np.int32)
+    N = 9
+    kp = jnp.zeros((N, bs, cfg.n_kv_heads, cfg.head_dim))
+    vp = jnp.zeros((N, bs, cfg.n_kv_heads, cfg.head_dim))
+    for b in range(B):
+        for j in range(M):
+            kp = kp.at[perm[b, j]].set(dense["k"][b, j * bs:(j + 1) * bs])
+            vp = vp.at[perm[b, j]].set(dense["v"][b, j * bs:(j + 1) * bs])
+    out_p, new_cache = attention.paged_decode_attention_block(
+        params, x, {"k": kp, "v": vp}, jnp.full((B,), pos, jnp.int32),
+        jnp.asarray(perm), cfg)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# Block allocator invariants under random admit/evict churn
+# ----------------------------------------------------------------------------
+
+def test_block_allocator_churn():
+    rng = random.Random(0)
+    alloc = BlockAllocator(64)
+    live = {}  # rid -> blocks
+    rid = 0
+    for _ in range(2000):
+        if live and rng.random() < 0.45:
+            victim = rng.choice(sorted(live))
+            alloc.free(live.pop(victim))
+        else:
+            n = rng.randint(0, 9)
+            got = alloc.alloc(n)
+            if got is not None:
+                live[rid] = got
+                rid += 1
+        # invariants: disjoint ownership, no null block, conservation
+        owned = [b for bs in live.values() for b in bs]
+        assert len(owned) == len(set(owned))
+        assert 0 not in owned
+        assert alloc.num_free + len(owned) == 63
+    # exhaustion returns None without a partial grant
+    free_before = alloc.num_free
+    assert alloc.alloc(free_before + 1) is None
+    assert alloc.num_free == free_before
+
+
+def test_block_allocator_errors():
+    alloc = BlockAllocator(8)
+    blocks = alloc.alloc(3)
+    alloc.free(blocks)
+    with pytest.raises(ValueError):
+        alloc.free(blocks)          # double free
+    with pytest.raises(ValueError):
+        alloc.free([0])             # reserved null block
+
+
+# ----------------------------------------------------------------------------
+# prefill == token-by-token priming
+# ----------------------------------------------------------------------------
+
+def test_prefill_matches_stepwise_priming():
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, P = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                              cfg.vocab_size)
+    logits_pf, _ = lm.prefill(params, cfg, {"tokens": toks})
+    state = lm.init_decode_state(cfg, B, max_len=P + 1)
+    logits_step = None
+    for pos in range(P):
+        logits_step, state = lm.decode_step(params, cfg, state,
+                                            toks[:, pos], jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(logits_pf[:, -1]),
+                               np.asarray(logits_step),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+# engine greedy outputs == generate() (bit-identical token ids)
+# ----------------------------------------------------------------------------
+
+def test_engine_matches_generate_exactly():
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, P, gen = 4, 8, 12
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+    expect = np.asarray(generate(params, cfg, prompts, gen))
+    engine = ServingEngine(params, cfg, num_slots=B, block_size=4,
+                           max_seq_len=P + gen + 1)
+    done = engine.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                               max_new_tokens=gen) for i in range(B)])
+    assert len(done) == B
+    for c in done:
+        np.testing.assert_array_equal(c.tokens, expect[c.rid])
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b"])
+def test_engine_continuous_batching_churn(arch):
+    """More requests than slots, ragged lengths: every request completes,
+    every output matches its own single-request generate(), and all blocks
+    are returned to the pool."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n, P = 7, 8
+    gens = [5, 12, 3, 9, 12, 7, 4]
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (n, P), 0,
+                                 cfg.vocab_size)
+    engine = ServingEngine(params, cfg, num_slots=3, block_size=4,
+                           max_seq_len=P + max(gens) + 1)
+    free0 = engine.allocator.num_free
+    done = engine.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                               max_new_tokens=gens[i]) for i in range(n)])
+    assert len(done) == n
+    assert engine.allocator.num_free == free0
+    for c in done:
+        expect = np.asarray(generate(params, cfg, prompts[c.rid][None],
+                                     gens[c.rid]))[0]
+        np.testing.assert_array_equal(c.tokens, expect)
+
+
+def test_engine_eos_and_telemetry():
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                 cfg.vocab_size)
+    full = np.asarray(generate(params, cfg, prompts, 8))[0]
+    eos = int(full[3])  # stops at eos's FIRST occurrence (may be < index 3)
+    stop = int(np.argmax(full == eos)) + 1
+    engine = ServingEngine(params, cfg, num_slots=2, block_size=4,
+                           max_seq_len=32)
+    done = engine.run([Request(rid=0, prompt=np.asarray(prompts[0]),
+                               max_new_tokens=8, eos_id=eos)])
+    assert len(done[0].tokens) == stop
+    np.testing.assert_array_equal(done[0].tokens, full[:stop])
+    from repro.serving.engine import summarize
+    stats = summarize(done, engine.wall_time, engine)
+    assert stats["generated_tokens"] == stop
+    assert stats["tokens_per_s"] > 0
+    assert 0 < stats["slot_occupancy"] <= 1
+    assert stats["kv_cache_mb"] > 0
+    # TTFT covers admission->first token, and timestamps are ordered
+    c = done[0]
+    assert c.arrival <= c.t_admit <= c.t_first_token <= c.t_done
+    # empty run: telemetry degrades gracefully
+    empty = summarize(engine.run([]), engine.wall_time, engine)
+    assert empty["requests"] == 0 and empty["tokens_per_s"] == 0.0
+
+
+def test_synthetic_requests_open_loop():
+    reqs = synthetic_requests(16, vocab_size=100, prompt_len=8,
+                              max_new=(2, 5), rate=100.0, seed=3)
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr) and arr[-1] > 0
+    assert all(2 <= r.max_new_tokens <= 5 for r in reqs)
+    assert all(r.prompt.shape == (8,) and r.prompt.dtype == np.int32
+               for r in reqs)

@@ -24,6 +24,7 @@ def test_train_reduces_loss_baseline():
 
 
 def test_generate_end_to_end():
+    from repro import compat
     from repro.configs import get_config
     from repro.launch.mesh import make_host_mesh
     from repro.launch.serve import generate
@@ -32,12 +33,12 @@ def test_generate_end_to_end():
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                  cfg.vocab_size)
-    with jax.set_mesh(make_host_mesh()):
+    with compat.set_mesh(make_host_mesh()):
         toks = generate(params, cfg, prompts, 12)
     assert toks.shape == (2, 12)
     assert bool((toks >= 0).all()) and bool((toks < cfg.vocab_size).all())
     # greedy decode is deterministic
-    with jax.set_mesh(make_host_mesh()):
+    with compat.set_mesh(make_host_mesh()):
         toks2 = generate(params, cfg, prompts, 12)
     np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
 
