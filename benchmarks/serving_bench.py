@@ -2,16 +2,28 @@
 
 The seed path (launch/serve.generate) primes the KV cache one token at a
 time in a Python loop, serves one fixed batch in lockstep, and every
-sequence decodes to the longest request in its batch. The engine prefills
-each prompt in a single jit call and keeps the decode batch full by
-evicting/admitting mid-flight. Both are warmed up (jit compile excluded)
-and run the identical workload; useful tokens = each request's own
-max_new_tokens.
+sequence decodes to the longest request in its batch. The engine admits
+several same-bucket prompts per batched prefill dispatch, shares cached
+prompt-prefix blocks across sequences, and keeps the decode batch full
+by evicting/admitting mid-flight. Both are warmed up (jit compile
+excluded) and run the identical workload; useful tokens = each request's
+own max_new_tokens.
+
+Workloads (--workload):
+  uniform        fixed prompt length (PR 1 scenario)
+  mixed          uniform-random prompt lengths in [--prompt-len LO HI] —
+                 exercises the power-of-two prefill length buckets: the
+                 record includes prefill jit shapes vs distinct lengths
+  shared-prefix  common system prompt + short per-request suffix — runs
+                 the engine with the prefix cache ON and OFF and records
+                 computed vs cached prefill tokens for both
 
     PYTHONPATH=src python benchmarks/serving_bench.py --arch smollm-135m \
-        --requests 24 --prompt-len 128 --slots 8
+        --workload shared-prefix --requests 24 --prefix-len 192 --slots 8
 
-Writes the trajectory record to experiments/serving/bench_<arch>.json.
+Writes the trajectory record to
+experiments/serving/bench_<arch>_<workload>.json. Importable:
+`run_bench([...])` returns the record (used by the CI smoke test).
 """
 from __future__ import annotations
 
@@ -19,6 +31,7 @@ import argparse
 import json
 import os
 import time
+from typing import List, Optional
 
 import jax
 import numpy as np
@@ -26,8 +39,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
-from repro.serving.engine import (ServingEngine, summarize,
-                                  synthetic_requests)
+from repro.serving.engine import (ServingEngine, shared_prefix_requests,
+                                  summarize, synthetic_requests)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "serving")
@@ -35,12 +48,17 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 def run_baseline(params, cfg, requests, batch: int):
     """Seed behavior: fixed batches, token-by-token priming, lockstep
-    decode to the longest member. Returns (useful_tokens, seconds)."""
+    decode to the longest member; ragged prompt lengths right-pad to the
+    batch max (the baseline has no ragged support — padding work counts
+    against it exactly as it would in production).
+    Returns (useful_tokens, seconds)."""
     groups = [requests[i:i + batch] for i in range(0, len(requests), batch)]
     useful = 0
     t0 = time.perf_counter()
     for group in groups:
-        prompts = np.stack([r.prompt for r in group])
+        plen = max(len(r.prompt) for r in group)
+        prompts = np.stack([np.pad(r.prompt, (0, plen - len(r.prompt)))
+                            for r in group])
         gen = max(r.max_new_tokens for r in group)
         toks = generate(params, cfg, jax.numpy.asarray(prompts), gen)
         jax.block_until_ready(toks)
@@ -55,42 +73,71 @@ def run_engine(engine, requests):
                                                engine)
 
 
-def main():
+def _make_requests(args, cfg):
+    if args.workload == "shared-prefix":
+        return shared_prefix_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            prefix_len=args.prefix_len,
+            suffix_len=tuple(args.suffix_len), max_new=tuple(args.max_new),
+            n_prefixes=args.n_prefixes, seed=args.seed)
+    plen = (args.prompt_len[0] if len(args.prompt_len) == 1
+            else tuple(args.prompt_len))
+    if args.workload == "mixed" and len(args.prompt_len) == 1:
+        plen = (max(args.prompt_len[0] // 4, 1), args.prompt_len[0])
+    return synthetic_requests(args.requests, vocab_size=cfg.vocab_size,
+                              prompt_len=plen, max_new=tuple(args.max_new),
+                              seed=args.seed)
+
+
+def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache):
+    engine = ServingEngine(params, cfg, num_slots=args.slots,
+                           block_size=args.block_size, max_seq_len=max_seq,
+                           prefix_cache=prefix_cache,
+                           prefill_max_batch=args.prefill_batch)
+    engine.run(reqs)                  # warm up jit on the workload shapes
+    engine.reset_prefix_cache()       # measured pass starts cache-cold
+    return run_engine(engine, reqs)
+
+
+def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--workload", default="uniform",
+                    choices=["uniform", "mixed", "shared-prefix"])
     ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, nargs="+", default=[256])
+    ap.add_argument("--prefix-len", type=int, default=192,
+                    help="shared system-prompt length (shared-prefix)")
+    ap.add_argument("--suffix-len", type=int, nargs=2, default=(8, 64),
+                    help="per-request suffix range (shared-prefix)")
+    ap.add_argument("--n-prefixes", type=int, default=1)
     ap.add_argument("--max-new", type=int, nargs=2, default=(4, 32))
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=OUT_DIR)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    reqs = synthetic_requests(args.requests, vocab_size=cfg.vocab_size,
-                              prompt_len=args.prompt_len,
-                              max_new=tuple(args.max_new), seed=args.seed)
-    max_seq = args.prompt_len + max(args.max_new) + 1
-    engine = ServingEngine(params, cfg, num_slots=args.slots,
-                           block_size=args.block_size, max_seq_len=max_seq)
+    reqs = _make_requests(args, cfg)
+    max_seq = max(len(r.prompt) for r in reqs) + max(args.max_new) + 1
 
-    # warm up both paths on the EXACT workload shapes (incl. a ragged last
-    # group) so jit compile stays out of the measurement; the engine run
-    # also resets its step counters on the measured pass
-    engine.run(reqs)
+    # warm the baseline on the exact workload shapes too
     run_baseline(params, cfg, reqs, args.slots)
-
     base_tok, base_s = run_baseline(params, cfg, reqs, args.slots)
-    eng_tok, eng_s, eng_stats = run_engine(engine, reqs)
+
+    eng_tok, eng_s, eng_stats = _measure_engine(params, cfg, args, reqs,
+                                                max_seq, prefix_cache=None)
 
     base_tps = base_tok / base_s
     eng_tps = eng_tok / eng_s
     record = {
         "arch": args.arch,
+        "workload": args.workload,
         "requests": args.requests,
-        "prompt_len": args.prompt_len,
+        "prompt_lens": sorted({len(r.prompt) for r in reqs}),
         "max_new": list(args.max_new),
         "slots": args.slots,
         "block_size": args.block_size,
@@ -99,14 +146,34 @@ def main():
         "engine": eng_stats,
         "speedup": round(eng_tps / base_tps, 2),
     }
+    if args.workload == "shared-prefix":
+        _, _, nocache = _measure_engine(params, cfg, args, reqs, max_seq,
+                                        prefix_cache=False)
+        record["engine_no_prefix_cache"] = nocache
+        record["prefill_tokens_saved"] = (
+            nocache["prefill"]["computed_tokens"]
+            - eng_stats["prefill"]["computed_tokens"])
     print(f"serving_baseline_tok_s,{base_tps:.1f},")
     print(f"serving_engine_tok_s,{eng_tps:.1f},")
     print(f"serving_speedup,{record['speedup']:.2f},x over token-by-token")
+    pf = eng_stats["prefill"]
+    print(f"prefill_computed_tokens,{pf['computed_tokens']},"
+          f"of {pf['prompt_tokens']} prompt tokens "
+          f"({pf['cached_tokens']} cached)")
+    print(f"prefill_jit_shapes,{pf['shapes']},"
+          f"vs {len(record['prompt_lens'])} distinct prompt lengths "
+          f"(bucket bound {pf['buckets']})")
     os.makedirs(args.out, exist_ok=True)
-    path = os.path.join(args.out, f"bench_{args.arch}.json")
+    path = os.path.join(args.out,
+                        f"bench_{args.arch}_{args.workload}.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {path}")
+    return record
+
+
+def main():
+    run_bench()
 
 
 if __name__ == "__main__":

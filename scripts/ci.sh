@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the full test suite from the repo root.
-#   scripts/ci.sh            # everything
-#   scripts/ci.sh -m 'not slow'
+# Tier-1 verify, from the repo root.
+#   scripts/ci.sh              # fast gate (default): -m 'not slow'
+#   scripts/ci.sh fast         # same, explicitly
+#   scripts/ci.sh full         # everything, including slow e2e tests
+#   scripts/ci.sh serving      # serving subsystem only (-m serving)
+#   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+case "${1:-fast}" in
+  fast)    shift || true; exec python -m pytest -x -q -m 'not slow' "$@" ;;
+  full)    shift;         exec python -m pytest -x -q "$@" ;;
+  serving) shift;         exec python -m pytest -x -q -m serving "$@" ;;
+  *)                      exec python -m pytest -x -q "$@" ;;
+esac

@@ -234,6 +234,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
                       if k in cost},
             hbm_model=hbm,
             collectives=coll,
+            elementwise_flops=analysis["elementwise_flops"],
             roofline=roof.as_dict(),
         )
         print(f"[ok] {cell_id}: compile={t_compile:.0f}s "

@@ -1,4 +1,4 @@
-"""HLO analysis: while-aware collective + dot-FLOP extraction, and the
+"""HLO analysis: while-aware collective + FLOP extraction, and the
 3-term roofline model.
 
 XLA's HloCostAnalysis (and compiled.cost_analysis()) visits while-loop bodies
@@ -8,10 +8,12 @@ post-SPMD HLO text into its computation graph, extract per-computation
 
   * collective result bytes by op kind (+ replica group sizes),
   * dot FLOPs (2 * prod(result_dims) * contracted_size),
+  * elementwise FLOPs (1 per float result element for arithmetic /
+    transcendental ops, input elements for reduce) — small for dense LM
+    matmul programs but material for softmax/norm-heavy decode steps,
 
 and propagate through call sites with while-loop trip counts (recovered from
-the loop-condition constant). Elementwise FLOPs are ignored (<<1% for LM
-workloads; stated in EXPERIMENTS.md).
+the loop-condition constant).
 
 Roofline factors (ring algorithms):
     all-reduce      2 (p-1)/p * bytes
@@ -63,6 +65,21 @@ _COLL_RE = re.compile(
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
 
+# elementwise arithmetic / transcendental opcodes: 1 FLOP per float
+# result element (select/compare/convert and pure data movement are free)
+_EW_OPS = frozenset((
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "power", "remainder", "atan2", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "logistic", "tanh",
+    "sqrt", "rsqrt", "cbrt", "sine", "cosine", "tan", "erf",
+))
+_FLOAT_DTYPES = frozenset(("f64", "f32", "bf16", "f16", "f8e4m3fn",
+                           "f8e5m2"))
+_OPCODE_RE = re.compile(
+    r"=\s*([a-z]\w*)\[([\d,]*)\]\S*\s+([a-z][\w\-]*)\(")
+_REDUCE_OPERAND_RE = re.compile(r"reduce\(\s*([a-z]\w*)\[([\d,]*)\]")
+
 
 def _shape_bytes(shape_str: str) -> int:
     total = 0
@@ -90,6 +107,7 @@ class _Comp:
     name: str
     coll: dict                    # op -> {bytes, count, group_size}
     dot_flops: float
+    ew_flops: float               # elementwise + reduce FLOPs
     whiles: list                  # (body_name, cond_name)
     calls: list                   # plain to_apply / calls / fusion names
     branches: list                # conditional branch computation sets
@@ -114,9 +132,18 @@ def _split_computations(hlo: str):
     return comps
 
 
+def _elems(dims_str: str) -> int:
+    n = 1
+    for d in dims_str.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
 def _analyze_comp(name: str, lines) -> _Comp:
     coll = defaultdict(lambda: {"bytes": 0, "count": 0, "group_size": 1})
     dot_flops = 0.0
+    ew_flops = 0.0
     whiles, calls, branches = [], [], []
     max_const = 1
     shapes = {}  # instruction name -> result dims (first shape in the type)
@@ -140,6 +167,16 @@ def _analyze_comp(name: str, lines) -> _Comp:
             branches.append([c.strip().lstrip("%")
                              for c in mbr.group(1).split(",")])
             continue
+        mop = _OPCODE_RE.search(s)
+        if mop:
+            rdt, rdims, opcode = mop.groups()
+            if opcode in _EW_OPS and rdt in _FLOAT_DTYPES:
+                ew_flops += _elems(rdims)
+            elif opcode == "reduce":
+                # N-element float reduce = ~N applications of the body
+                mr = _REDUCE_OPERAND_RE.search(s)
+                if mr and mr.group(1) in _FLOAT_DTYPES:
+                    ew_flops += _elems(mr.group(2))
         if " dot(" in s and mdef:
             md = _DOT_RE.search(s)
             if md:
@@ -179,11 +216,12 @@ def _analyze_comp(name: str, lines) -> _Comp:
             if not s[mc.start():].startswith(("body", "condition")):
                 calls.append(mc.group(1))
     return _Comp(name, {k: dict(v) for k, v in coll.items()}, dot_flops,
-                 whiles, calls, branches, max_const)
+                 ew_flops, whiles, calls, branches, max_const)
 
 
 def analyze_hlo(hlo_text: str, entry: str | None = None) -> dict:
-    """Trip-count-weighted totals: {'collectives': {...}, 'dot_flops': f}."""
+    """Trip-count-weighted totals: {'collectives': {...}, 'dot_flops': f,
+    'elementwise_flops': f}."""
     raw = _split_computations(hlo_text)
     comps = {n: _analyze_comp(n, ls) for n, ls in raw.items()}
     if entry is None:
@@ -203,17 +241,19 @@ def analyze_hlo(hlo_text: str, entry: str | None = None) -> dict:
 
     def visit(name, depth=0):
         if name not in comps or depth > 64:
-            return {}, 0.0
+            return {}, 0.0, 0.0
         if name in memo:
             return memo[name]
-        memo[name] = ({}, 0.0)  # cycle guard
+        memo[name] = ({}, 0.0, 0.0)  # cycle guard
         c = comps[name]
         coll = {k: dict(v) for k, v in c.coll.items()}
         flops = c.dot_flops
+        ew = c.ew_flops
 
-        def acc(sub_coll, sub_flops, mult):
-            nonlocal flops
+        def acc(sub_coll, sub_flops, sub_ew, mult):
+            nonlocal flops, ew
             flops += sub_flops * mult
+            ew += sub_ew * mult
             for op, st in sub_coll.items():
                 dst = coll.setdefault(
                     op, {"bytes": 0, "count": 0, "group_size": 1})
@@ -227,22 +267,23 @@ def analyze_hlo(hlo_text: str, entry: str | None = None) -> dict:
             else:
                 trips = comps[cond].max_const if cond in comps else 1
             sub = visit(body, depth + 1)
-            acc(sub[0], sub[1], max(trips, 1))
+            acc(sub[0], sub[1], sub[2], max(trips, 1))
         for callee in c.calls:
             sub = visit(callee, depth + 1)
-            acc(sub[0], sub[1], 1)
+            acc(sub[0], sub[1], sub[2], 1)
         for br in c.branches:
-            best = ({}, 0.0)
+            best = ({}, 0.0, 0.0)
             for b in br:
                 sub = visit(b, depth + 1)
-                if sub[1] >= best[1]:
+                if sub[1] + sub[2] >= best[1] + best[2]:
                     best = sub
-            acc(best[0], best[1], 1)
-        memo[name] = (coll, flops)
+            acc(best[0], best[1], best[2], 1)
+        memo[name] = (coll, flops, ew)
         return memo[name]
 
-    coll, flops = visit(entry)
-    return {"collectives": coll, "dot_flops": flops, "entry": entry}
+    coll, flops, ew = visit(entry)
+    return {"collectives": coll, "dot_flops": flops,
+            "elementwise_flops": ew, "entry": entry}
 
 
 def parse_collectives(hlo_text: str) -> dict:

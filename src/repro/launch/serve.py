@@ -3,7 +3,12 @@ fixed-batch path, with an open-loop synthetic traffic generator and
 throughput/latency telemetry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --requests 32 --slots 8 --prompt-len 64 --max-new 8 32 --rate 50
+        --requests 32 --slots 8 --prompt-len 24 64 --max-new 8 32 --rate 50
+
+    # shared-prefix traffic (system prompt + per-request suffix) with
+    # prefix caching and explicit prefill length buckets:
+    PYTHONPATH=src python -m repro.launch.serve --workload shared-prefix \
+        --prefix-len 48 --prefix-cache --prefill-buckets 16 32 64
 
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
@@ -27,7 +32,8 @@ from repro import compat
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
-from repro.serving.engine import (Request, ServingEngine, summarize,
+from repro.serving.engine import (Request, ServingEngine,
+                                  shared_prefix_requests, summarize,
                                   synthetic_requests)
 
 
@@ -68,16 +74,36 @@ def generate(params, cfg, prompts, gen_len: int, *, temperature: float = 0.0,
     return jnp.stack(out, axis=1)
 
 
+def _prompt_len_spec(values):
+    """One int = fixed length; two ints = uniform (lo, hi) mixed."""
+    if len(values) == 1:
+        return values[0]
+    if len(values) == 2:
+        return (values[0], values[1])
+    raise SystemExit("--prompt-len takes one or two ints")
+
+
 def _run_engine(args, cfg, params):
     rate = float("inf") if args.rate <= 0 else args.rate
-    reqs = synthetic_requests(
-        args.requests, vocab_size=cfg.vocab_size,
-        prompt_len=args.prompt_len, max_new=tuple(args.max_new),
-        rate=rate, seed=args.seed)
+    plen = _prompt_len_spec(args.prompt_len)
+    if args.workload == "shared-prefix":
+        reqs = shared_prefix_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            prefix_len=args.prefix_len, suffix_len=plen,
+            max_new=tuple(args.max_new), n_prefixes=args.n_prefixes,
+            rate=rate, seed=args.seed)
+    else:
+        reqs = synthetic_requests(
+            args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
+            max_new=tuple(args.max_new), rate=rate, seed=args.seed)
+    max_prompt = max(len(r.prompt) for r in reqs)
     engine = ServingEngine(
         params, cfg, num_slots=args.slots, block_size=args.block_size,
-        max_seq_len=args.prompt_len + max(args.max_new) + 1,
-        temperature=args.temperature, seed=args.seed)
+        max_seq_len=max_prompt + max(args.max_new) + 1,
+        temperature=args.temperature, seed=args.seed,
+        prefix_cache=args.prefix_cache,
+        prefill_buckets=args.prefill_buckets,
+        prefill_max_batch=args.prefill_batch)
     done = engine.run(reqs)
     stats = summarize(done, engine.wall_time, engine)
     print(json.dumps(stats, indent=1))
@@ -87,13 +113,14 @@ def _run_engine(args, cfg, params):
 
 
 def _run_naive(args, cfg, params):
+    plen = args.prompt_len[0]     # naive path is fixed-shape by design
     if cfg.frontend == "audio":
         prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                     (args.batch, args.prompt_len,
+                                     (args.batch, plen,
                                       cfg.n_codebooks), 0, cfg.vocab_size)
     else:
         prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                     (args.batch, args.prompt_len), 0,
+                                     (args.batch, plen), 0,
                                      cfg.vocab_size)
     t0 = time.time()
     tokens = generate(params, cfg, prompts, max(args.max_new),
@@ -114,9 +141,26 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4,
                     help="fixed batch for --mode naive")
-    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, nargs="+", default=[64],
+                    help="fixed length, or LO HI for mixed-length traffic "
+                         "(suffix length under --workload shared-prefix)")
     ap.add_argument("--max-new", type=int, nargs=2, default=(8, 32),
                     metavar=("LO", "HI"))
+    ap.add_argument("--workload", default="synthetic",
+                    choices=["synthetic", "shared-prefix"])
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="shared system-prompt length (shared-prefix)")
+    ap.add_argument("--n-prefixes", type=int, default=1,
+                    help="distinct system prompts (shared-prefix)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="share cached prompt-prefix blocks (default: auto "
+                         "— on for pure-attention archs)")
+    ap.add_argument("--prefill-buckets", type=int, nargs="+", default=None,
+                    help="suffix-length buckets for batched prefill "
+                         "(default: powers of two up to max_seq_len)")
+    ap.add_argument("--prefill-batch", type=int, default=4,
+                    help="max prompts admitted per prefill dispatch")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop arrival rate req/s (<=0: all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0)

@@ -225,6 +225,75 @@ def decode_attention_block(params, x, cache, pos, cfg, *, window: int = 0):
 
 
 # ----------------------------------------------------------------------------
+# Paged KV-cache prefill (bucketed batched admission over cached prefixes)
+# ----------------------------------------------------------------------------
+
+def paged_prefill_attention_block(params, x, cache, positions, block_tables,
+                                  starts, lengths, cached_lens, cfg, *,
+                                  window: int = 0):
+    """Suffix prefill for a batch of sequences straight into paged KV.
+
+    x: (N, Ls, D) — each row is one sequence's prompt SUFFIX (tokens from
+    `starts[n]` on), right-padded to the bucket length Ls;
+    positions: (N, Ls) absolute token positions (= starts[:, None] + i);
+    starts: (N,) first computed position (cached prefix skipped, capped
+    at lengths-1 so at least one token is always computed);
+    lengths: (N,) true prompt lengths; cached_lens: (N,) tokens whose KV
+    already sits in the sequence's blocks (scatter skips them);
+    block_tables: (N, max_blocks); cache k/v: physical block pools.
+
+    Queries attend to the cached prefix (gathered through the block
+    table, masked to kpos < starts) plus the suffix causally; the
+    suffix's rope'd K/V is scattered into (table[p // bs], p % bs) for
+    cached_lens <= p < lengths — padded and already-cached positions are
+    redirected to the null block. Scores materialize
+    (N, H, Ls, M*bs + Ls) like one decode step per suffix token; chunk
+    Ls upstream for long-prompt memory safety. Returns (out, new_cache).
+    """
+    N, Ls, D = x.shape
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                   positions, cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    M = block_tables.shape[1]
+    gk = cache["k"][block_tables].reshape(N, M * bs, *cache["k"].shape[2:])
+    gv = cache["v"][block_tables].reshape(N, M * bs, *cache["v"].shape[2:])
+    s = _gqa_scores(q, jnp.concatenate([gk, k], axis=1))
+    s = s * (cfg.head_dim ** -0.5)              # (N, H, Ls, M*bs + Ls)
+
+    kpos_pre = jnp.arange(M * bs)
+    valid_pre = jnp.broadcast_to(
+        (kpos_pre[None, :] < starts[:, None])[:, None, :], (N, Ls, M * bs))
+    i = jnp.arange(Ls)
+    causal = (i[None, :] <= i[:, None])[None]                # (1, Ls, Ls)
+    in_suffix = (i[None, None, :]
+                 < (lengths - starts)[:, None, None])        # (N, 1, Ls)
+    valid_suf = jnp.broadcast_to(jnp.logical_and(causal, in_suffix),
+                                 (N, Ls, Ls))
+    if window > 0:
+        valid_pre = jnp.logical_and(
+            valid_pre, kpos_pre[None, None, :]
+            > positions[:, :, None] - window)
+        valid_suf = jnp.logical_and(
+            valid_suf, positions[:, None, :]
+            > positions[:, :, None] - window)
+    valid = jnp.concatenate([valid_pre, valid_suf], axis=-1)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, jnp.concatenate([gv, v], axis=1))
+    out = (o.reshape(N, Ls, -1) @ params["wo"]).astype(x.dtype)
+
+    write = jnp.logical_and(positions >= cached_lens[:, None],
+                            positions < lengths[:, None])    # (N, Ls)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.clip(positions // bs, 0, M - 1), axis=1)
+    blk = jnp.where(write, blk, 0)               # null-sink the rest
+    off = positions % bs
+    ck = cache["k"].at[blk, off].set(k)
+    cv = cache["v"].at[blk, off].set(v)
+    return out, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------------
 # Paged KV-cache decode (continuous-batching serving)
 # ----------------------------------------------------------------------------
 

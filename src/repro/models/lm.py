@@ -10,12 +10,17 @@ Entry points:
   init_params(key, cfg)
   train_loss(params, cfg, batch)              -> loss, metrics
   forward(params, cfg, batch)                 -> logits            (prefill)
-  prefill(params, cfg, batch)                 -> logits, kv cache  (serving)
+  prefill(params, cfg, batch)                 -> logits, kv cache  (serving;
+         batch may carry "lengths" for right-padded mixed-length rows)
   init_decode_state(cfg, batch, max_len)      -> state pytree
   decode_step(params, cfg, state, tokens, pos)-> logits, new state (decode)
   decode_step_paged(params, cfg, state, tokens, positions, block_tables)
       -> logits, new state    (continuous-batching decode over paged KV;
          see serving/ for slot scheduling and block allocation)
+  prefill_paged(params, cfg, state, tokens, lengths, cached_lens,
+                block_tables, slots)
+      -> last_logits, new state   (bucketed batched prefill straight into
+         paged state, skipping prefix-cached tokens; see serving/runner)
 """
 from __future__ import annotations
 
@@ -84,12 +89,18 @@ def _init_block(key, cfg: ModelConfig, kind: str):
 
 def _apply_block_seq(params, kind: str, x, positions, cfg: ModelConfig,
                      state=None, prefix_len: int = 0,
-                     collect_kv: bool = False):
+                     collect_kv: bool = False, lengths=None):
     """Sequence form (train / prefill). Returns (x, new_state, aux).
 
     collect_kv=True makes attention layers return their rope'd K/V as
     new_state (the decode-cache contents) so `prefill` can seed serving
-    caches in one pass; recurrent layers already return final states."""
+    caches in one pass; recurrent layers already return final states.
+
+    lengths: optional (B,) true lengths for right-padded batched
+    prefill. Attention needs no masking (trailing pads are causally
+    invisible to valid queries); recurrent layers freeze their state
+    past each row's length so final states are exact (see recurrent.py).
+    """
     aux = {}
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_state = state
@@ -118,16 +129,19 @@ def _apply_block_seq(params, kind: str, x, positions, cfg: ModelConfig,
         x = x + o2
     elif kind == "rwkv":
         st_t = None if state is None else state["tmix"]
-        o, st_t = recurrent.rwkv_seq(params["tmix"], h, cfg, st_t)
+        o, st_t = recurrent.rwkv_seq(params["tmix"], h, cfg, st_t,
+                                     lengths=lengths)
         x = x + o
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         st_c = None if state is None else state["cmix"]
-        o2, shift = recurrent.rwkv_channel_mix(params["cmix"], h2, st_c)
+        o2, shift = recurrent.rwkv_channel_mix(params["cmix"], h2, st_c,
+                                               lengths=lengths)
         x = x + o2
         new_state = {"tmix": st_t, "cmix": shift}
     elif kind == "rec":
         st = None if state is None else state["rec"]
-        o, st = recurrent.rglru_block_seq(params["rec"], h, cfg, st)
+        o, st = recurrent.rglru_block_seq(params["rec"], h, cfg, st,
+                                          lengths=lengths)
         x = x + o
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
@@ -221,7 +235,8 @@ def _embed_inputs(params, cfg: ModelConfig, batch):
 
 
 def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
-                    remat: bool = True, collect_kv: bool = False):
+                    remat: bool = True, collect_kv: bool = False,
+                    lengths=None):
     """Runs prefix layers + the superblock scan. Returns (h, aux, states);
     states is the per-layer decode cache (see _apply_block_seq collect_kv)
     when collect_kv=True, else None — the scan carry/ys stay identical to
@@ -232,7 +247,8 @@ def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
     for p, kind in zip(params["prefix"], cfg.prefix_pattern):
         h, st, aux = _apply_block_seq(p, kind, h, positions, cfg,
                                       prefix_len=prefix_len,
-                                      collect_kv=collect_kv)
+                                      collect_kv=collect_kv,
+                                      lengths=lengths)
         prefix_states.append(st)
         for k in aux:
             aux_acc[k] = aux_acc[k] + aux[k]
@@ -247,7 +263,8 @@ def _run_blocks_seq(params, cfg: ModelConfig, h, positions, prefix_len,
             h, st, aux = _apply_block_seq(block_params[f"p{pi}"], kind, h,
                                           positions, cfg,
                                           prefix_len=prefix_len,
-                                          collect_kv=collect_kv)
+                                          collect_kv=collect_kv,
+                                          lengths=lengths)
             if collect_kv:
                 states[f"p{pi}"] = st
             for k in aux:
@@ -309,6 +326,13 @@ def prefill(params, cfg: ModelConfig, batch):
     n_super axis from the scan), recurrent layers hold their final states.
     serving/kv_cache.load_prefill scatters this into paged slot state.
 
+    batch may carry "lengths" ((B,) int32 true lengths) for right-padded
+    mixed-length batches: attention is exact under trailing padding
+    (causal masking), recurrent layers freeze past each row's length, so
+    per-row cache states and logits[b, lengths[b]-1] match an unpadded
+    run. KV at padded positions is garbage — consumers must slice or
+    mask by length (prefill_paged's scatter does).
+
     Replaces the seed's token-by-token cache priming loop: S sequential
     decode_step dispatches (each a (B,1,D) matmul) collapse into one
     chunked-causal forward with MXU-shaped matmuls.
@@ -316,7 +340,8 @@ def prefill(params, cfg: ModelConfig, batch):
     params = cast_params(params, cfg)
     h, positions, prefix_len = _embed_inputs(params, cfg, batch)
     h, _, cache = _run_blocks_seq(params, cfg, h, positions, prefix_len,
-                                  remat=False, collect_kv=True)
+                                  remat=False, collect_kv=True,
+                                  lengths=batch.get("lengths"))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     if cfg.frontend == "vision":
         h = h[:, prefix_len:]
@@ -469,6 +494,100 @@ def _apply_block_step_paged(params, kind: str, x, positions,
         return x, new_cache
     # rwkv / rec: position-independent recurrences; reuse the dense step
     return _apply_block_step(params, kind, x, 0, cfg, state)
+
+
+def _apply_block_prefill_paged(params, kind: str, x, positions,
+                               cfg: ModelConfig, state, block_tables,
+                               starts, lengths, cached_lens, slots):
+    """Batched suffix-prefill against paged state. x: (N, Ls, D).
+
+    Attention layers attend to their cached prefix through the block
+    table and scatter the suffix K/V into the pools; recurrent layers
+    run the length-masked sequence form from a fresh state (recurrent
+    archs cannot resume from block-structured caches — the engine
+    forces cached_lens = 0 for them) and scatter final states at the
+    slot indices (out-of-range slots, used for padding rows, drop)."""
+    if kind in ("attn", "attn_local", "moe"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        window = cfg.window if kind == "attn_local" else 0
+        o, new_cache = attention.paged_prefill_attention_block(
+            params["attn"], h, state, positions, block_tables, starts,
+            lengths, cached_lens, cfg, window=window)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe_lib.moe_block(params["moe"], h2, cfg,
+                                      kind=cfg.mlp_kind)
+            x = x + o2
+        else:
+            x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        return x, new_cache
+    # rwkv / rec: fresh run over the (whole) prompt, freeze past length
+    x, fin, _ = _apply_block_seq(params, kind, x, positions, cfg,
+                                 state=None, lengths=lengths - starts)
+    new_state = jax.tree.map(
+        lambda s, c: s.at[slots].set(c.astype(s.dtype), mode="drop"),
+        state, fin)
+    return x, new_state
+
+
+def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
+                  cached_lens, block_tables, slots):
+    """Bucketed batched prefill straight into the paged serving state.
+
+    tokens: (N, Ls) int32 — row n holds the prompt SUFFIX starting at
+    min(cached_lens[n], lengths[n]-1), right-padded to the bucket length
+    Ls; lengths: (N,) true prompt lengths; cached_lens: (N,) tokens
+    already present in the row's blocks (prefix-cache hits — their
+    compute AND their KV writes are skipped, except the last prompt
+    token which is always recomputed so first-token logits exist);
+    block_tables: (N, max_blocks) int32; slots: (N,) decode-slot index
+    per row (recurrent dense state lands there; pass num_slots to drop,
+    e.g. for batch-padding rows, which should also use lengths = 0 and
+    all-null table rows).
+
+    One jitted instance serves every batch whose (N, Ls) matches — the
+    scheduler buckets suffix lengths into powers of two precisely so the
+    number of prefill compilations is bounded by the bucket count, not
+    by the number of distinct prompt lengths in the workload.
+
+    Returns (last_logits (N, V) at each row's true last prompt token,
+    new_state).
+    """
+    params = cast_params(params, cfg)
+    N, Ls = tokens.shape
+    starts = jnp.minimum(cached_lens, jnp.maximum(lengths - 1, 0))
+    positions = starts[:, None] + jnp.arange(Ls, dtype=jnp.int32)[None, :]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+
+    new_prefix = []
+    for p, kind, st in zip(params["prefix"], cfg.prefix_pattern,
+                           state["prefix"]):
+        h, st_new = _apply_block_prefill_paged(
+            p, kind, h, positions, cfg, st, block_tables, starts, lengths,
+            cached_lens, slots)
+        new_prefix.append(st_new)
+
+    def superblock(h, xs):
+        block_params, block_state = xs
+        block_params = _pin_block(block_params)
+        h = _pin_act(h)
+        new_state = {}
+        for pi, kind in enumerate(cfg.block_pattern):
+            h, st = _apply_block_prefill_paged(
+                block_params[f"p{pi}"], kind, h, positions, cfg,
+                block_state[f"p{pi}"], block_tables, starts, lengths,
+                cached_lens, slots)
+            new_state[f"p{pi}"] = st
+        return h, new_state
+
+    h, new_blocks = lax.scan(superblock, h,
+                             (params["blocks"], state["blocks"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, cfg, h)                         # (N, Ls, V)
+    idx = jnp.clip(lengths - 1 - starts, 0, Ls - 1)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return last, {"prefix": new_prefix, "blocks": new_blocks}
 
 
 def decode_step_paged(params, cfg: ModelConfig, state, tokens, positions,

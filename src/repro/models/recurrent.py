@@ -75,10 +75,17 @@ def _rwkv_group_norm(y, scale, n_heads, head_dim, eps=1e-5):
     return (yf.reshape(B, S, -1) * scale.astype(jnp.float32)).astype(y.dtype)
 
 
-def rwkv_seq(params, x, cfg, state=None):
+def rwkv_seq(params, x, cfg, state=None, lengths=None):
     """Sequence form. x: (B, S, D). Returns (y, new_state).
 
     state = {"shift": (B, D) last token, "S": (B, H, hd, hd) wkv state}.
+
+    lengths: optional (B,) int32 true lengths for right-padded batched
+    prefill. Padded steps are masked so they leave the recurrence
+    untouched (decay forced to 1, k zeroed => S frozen) and the shift
+    state is gathered at each row's true last token, so final states
+    match an unpadded per-row run exactly. Outputs at valid positions
+    are unaffected either way (padding is strictly trailing).
     """
     B, S, D = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
@@ -88,6 +95,10 @@ def rwkv_seq(params, x, cfg, state=None):
     x_prev = jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
     r, k, v, g, w = _rwkv_projections(params, x, x_prev, H, hd)
     u = params["bonus_u"].astype(jnp.float32)
+    if lengths is not None:
+        valid = (jnp.arange(S)[None, :] < lengths[:, None])  # (B, S)
+        k = k * valid[..., None, None].astype(k.dtype)
+        w = jnp.where(valid[..., None, None], w, 1.0)
 
     def step(Sst, inp):
         rt, kt, vt, wt = inp                             # (B,H,hd) each
@@ -105,7 +116,14 @@ def rwkv_seq(params, x, cfg, state=None):
     y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * hd).astype(x.dtype)
     y = _rwkv_group_norm(y, params["ln_scale"], H, hd) * g
     out = y @ params["w_o"]
-    return out, {"shift": x[:, -1], "S": S_fin}
+    shift = x[:, -1] if lengths is None else _last_valid(x, lengths)
+    return out, {"shift": shift, "S": S_fin}
+
+
+def _last_valid(x, lengths):
+    """x: (B, S, D) -> (B, D) rows gathered at lengths-1 (clipped)."""
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
 
 
 def rwkv_step(params, x, cfg, state):
@@ -124,8 +142,9 @@ def init_rwkv_channel_mix(key, d_model, d_ff, dtype):
             "mix": (jax.random.uniform(k4, (2, d_model)) * 0.5).astype(dtype)}
 
 
-def rwkv_channel_mix(params, x, shift_state=None):
-    """RWKV channel mix (relu^2). Returns (y, last_token)."""
+def rwkv_channel_mix(params, x, shift_state=None, lengths=None):
+    """RWKV channel mix (relu^2). Returns (y, last_token); with
+    `lengths` the shift state is each row's true last token."""
     B, S, D = x.shape
     if shift_state is None:
         shift_state = jnp.zeros((B, D), x.dtype)
@@ -134,7 +153,9 @@ def rwkv_channel_mix(params, x, shift_state=None):
     xk = x + (x_prev - x) * mix[0]
     xr = x + (x_prev - x) * mix[1]
     k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
-    return jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"]), x[:, -1]
+    y = jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
+    shift = x[:, -1] if lengths is None else _last_valid(x, lengths)
+    return y, shift
 
 
 # ----------------------------------------------------------------------------
@@ -173,18 +194,31 @@ def _rglru_gates(params, x):
     return a, gated_x
 
 
-def _causal_conv1d(x, w, b, state=None):
-    """x: (B, S, C); w: (W, C) depthwise. state: (B, W-1, C) history."""
+def _causal_conv1d(x, w, b, state=None, lengths=None):
+    """x: (B, S, C); w: (W, C) depthwise. state: (B, W-1, C) history.
+    With `lengths`, the returned history window ends at each row's true
+    last input instead of the padded end."""
     W = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
-    return out + b, xp[:, -(W - 1):]
+    if lengths is None:
+        new_state = xp[:, -(W - 1):]
+    else:
+        # history = inputs at padded-coords [len, len + W - 2] (token
+        # positions len-W+1 .. len-1, reaching into the prior state)
+        idx = lengths[:, None] + jnp.arange(W - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return out + b, new_state
 
 
-def rglru_block_seq(params, x, cfg, state=None):
-    """Griffin recurrent block, sequence form. x: (B, S, D)."""
+def rglru_block_seq(params, x, cfg, state=None, lengths=None):
+    """Griffin recurrent block, sequence form. x: (B, S, D).
+
+    lengths: optional (B,) true lengths for right-padded batched
+    prefill — padded steps freeze the recurrence (a=1, gated input 0)
+    so final states match an unpadded per-row run."""
     B, S, D = x.shape
     rd = params["w_in_rec"].shape[1]
     if state is None:
@@ -194,8 +228,13 @@ def rglru_block_seq(params, x, cfg, state=None):
     branch = x @ params["w_in_rec"]
     gate = jax.nn.gelu(x @ params["w_in_gate"])
     branch, conv_state = _causal_conv1d(branch, params["conv_w"],
-                                        params["conv_b"], state["conv"])
+                                        params["conv_b"], state["conv"],
+                                        lengths=lengths)
     a, gx = _rglru_gates(params, branch)
+    if lengths is not None:
+        valid = (jnp.arange(S)[None, :] < lengths[:, None])[..., None]
+        a = jnp.where(valid, a, 1.0)
+        gx = jnp.where(valid, gx, 0.0)
 
     def step(h, inp):
         at, gxt = inp

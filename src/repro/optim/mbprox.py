@@ -82,8 +82,9 @@ def make_mbprox_step(loss_fn: Callable, mp_cfg: MBProxConfig, mesh,
 
         if mp_cfg.dane_correction:
             def anchor_loss(p):
-                # gradient at the anchor over the local held minibatch
-                losses = []
+                # anchor gradient from the FIRST microbatch of the local
+                # held minibatch (a stochastic DANE correction — one
+                # microbatch, not an average over all n_micro)
                 l, _ = loss_fn(p, jax.tree.map(lambda x: x[0], local_batch))
                 return l
             g_loc = jax.grad(anchor_loss)(params)

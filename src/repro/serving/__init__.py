@@ -1,14 +1,29 @@
-"""Continuous-batching serving subsystem.
+"""Continuous-batching serving subsystem, decomposed into three layers.
 
-`engine.ServingEngine` — slot-scheduled continuous batching over a paged
-KV cache (`kv_cache`): requests enter a queue, the scheduler admits them
-into free decode slots, finished sequences are evicted and replaced
+`engine.ServingEngine` is a thin facade over:
+
+  `scheduler.Scheduler`        queue, bucketed admission, lifecycle,
+                               eviction, copy-on-write orchestration
+  `block_manager.BlockAllocator`
+                               refcounted physical KV blocks + content-
+                               hash prefix index (shared prompt blocks)
+  `runner.ModelRunner`         jitted bucketed batched prefill / paged
+                               decode dispatch, device block tables
+
+Requests enter a queue; the scheduler admits same-bucket groups in one
+padded prefill dispatch; finished sequences are evicted and replaced
 mid-flight so the decode batch stays full under sustained load. Cache
-memory scales with live tokens (blocks), not batch x max_len.
+memory scales with live tokens (blocks), not batch x max_len, and
+identical prompt prefixes share physical blocks by refcount.
 """
+from repro.serving.block_manager import BlockAllocator, PrefixMatch
 from repro.serving.engine import (Completion, Request, ServingEngine,
-                                  summarize, synthetic_requests)
-from repro.serving.kv_cache import BlockAllocator, init_paged_state
+                                  shared_prefix_requests, summarize,
+                                  synthetic_requests)
+from repro.serving.kv_cache import init_paged_state
+from repro.serving.runner import ModelRunner
+from repro.serving.scheduler import Scheduler
 
 __all__ = ["ServingEngine", "Request", "Completion", "synthetic_requests",
-           "summarize", "BlockAllocator", "init_paged_state"]
+           "shared_prefix_requests", "summarize", "BlockAllocator",
+           "PrefixMatch", "ModelRunner", "Scheduler", "init_paged_state"]

@@ -1,0 +1,311 @@
+"""Refcounted block manager: physical KV blocks, prefix sharing, COW.
+
+The middle layer of the serving engine (scheduler -> block manager ->
+runner). It owns every host-side fact about the physical block pool:
+
+  * a free-list allocator over blocks 1..num_blocks-1 (block 0 is the
+    reserved null sink idle decode lanes write into),
+  * a reference count per live block, so immutable prompt-prefix blocks
+    can be shared by many sequences at once,
+  * a content-hash index over FULL immutable prompt blocks, keyed by a
+    chain hash (block tokens + everything before them), so two prompts
+    that share a prefix resolve to the same physical blocks,
+  * copy-on-write policy: `is_writable` says whether a sequence may
+    write a block in place (it owns the only reference AND the block is
+    not published in the index); otherwise the scheduler must copy the
+    block into a private one first.
+
+Freed blocks that are still in the index are not returned to the free
+list immediately: they park in an LRU "cached-free" pool and keep their
+contents, so a later request with the same prefix still hits — the
+serving-side analogue of the paper's hold-state-to-avoid-recomputation
+tradeoff. Allocation prefers truly-free blocks and evicts cached-free
+blocks LRU-first only under pressure, unregistering them.
+
+Invariants (property-tested in tests/test_block_manager.py):
+  * refcounts are never negative; decref of a dead block raises,
+  * a block is never simultaneously free and referenced,
+  * free + cached-free + live == num_blocks - 1 (conservation),
+  * shared (refcount > 1) or indexed blocks are never `is_writable`,
+  * alloc returns None, never a partial grant, when short.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+_ROOT = ("root",)  # parent key of a prompt's first block
+
+
+class PrefixMatch:
+    """Result of matching a prompt against the prefix index.
+
+    full_blocks     physical blocks covering whole 'block_size' chunks
+    partial_block   a cached block whose first `partial_len` tokens match
+                    the prompt's remainder (the first divergent block —
+                    shared copy-on-write), or None
+    partial_len     matched tokens inside partial_block
+    """
+
+    __slots__ = ("full_blocks", "partial_block", "partial_len")
+
+    def __init__(self, full_blocks: List[int],
+                 partial_block: Optional[int], partial_len: int):
+        self.full_blocks = full_blocks
+        self.partial_block = partial_block
+        self.partial_len = partial_len
+
+    def tokens(self, block_size: int) -> int:
+        return len(self.full_blocks) * block_size + self.partial_len
+
+    def blocks(self) -> List[int]:
+        out = list(self.full_blocks)
+        if self.partial_block is not None:
+            out.append(self.partial_block)
+        return out
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator with a prompt-prefix content index.
+
+    `block_size` is only needed for the prefix-cache methods
+    (match_prefix / register_prefix); a plain allocator can pass 0.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int = 0):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._ref: Dict[int, int] = {}
+        # prefix index state (all keyed by physical block id)
+        self._index: Dict[int, int] = {}       # chain key -> block
+        self._key: Dict[int, int] = {}         # block -> chain key
+        self._parent: Dict[int, Tuple] = {}    # block -> parent chain key
+        self._tokens: Dict[int, Tuple[int, ...]] = {}
+        self._children: Dict[Tuple, set] = {}  # parent key -> {blocks}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU ref==0
+        # telemetry
+        self.cache_evictions = 0
+
+    # ------------------------------------------------------------------
+    # refcounted alloc / free
+    # ------------------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        """Allocatable blocks (truly free + evictable cached-free)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n private blocks (refcount 1), or None if short. Evicts
+        cached-free blocks LRU-first under pressure — never a partial
+        grant."""
+        if n < 0:
+            raise ValueError(n)
+        if n > self.num_free:
+            return None
+        blocks = []
+        for _ in range(n):
+            if not self._free:
+                victim, _ = self._cached.popitem(last=False)  # LRU
+                self._evict(victim)
+                self._free.append(victim)
+                self.cache_evictions += 1
+            b = self._free.pop()
+            self._ref[b] = 1
+            blocks.append(b)
+        return blocks
+
+    def _evict(self, block: int) -> None:
+        """Unregister `block` and its whole indexed descendant subtree —
+        once the chain breaks, descendants can never be matched again.
+        Cached-free descendants return to the free list immediately;
+        live (still-referenced) ones just lose their registration."""
+        stack = [block]
+        while stack:
+            b = stack.pop()
+            key = self._key.get(b)
+            if key is not None:
+                stack.extend(self._children.get(key, ()))
+            self._unregister(b)
+            if b != block and b in self._cached:
+                del self._cached[b]
+                self._free.append(b)
+
+    def incref(self, block: int) -> None:
+        """Take a reference on a live or cached-free block (sharing)."""
+        if block == NULL_BLOCK:
+            raise ValueError("cannot reference the reserved null block")
+        refs = self._ref.get(block, 0)
+        if refs == 0:
+            if block not in self._cached:
+                raise ValueError(f"incref of free/unowned block {block}")
+            del self._cached[block]      # revive from the cached-free pool
+        self._ref[block] = refs + 1
+
+    def decref(self, block: int) -> None:
+        """Drop a reference; at zero the block goes to the cached-free
+        pool if it is indexed, else back to the free list."""
+        if block == NULL_BLOCK:
+            raise ValueError("cannot free the reserved null block")
+        refs = self._ref.get(block, 0)
+        if refs <= 0:
+            raise ValueError(f"double free / unowned block {block}")
+        if refs > 1:
+            self._ref[block] = refs - 1
+            return
+        del self._ref[block]
+        if block in self._key:
+            self._cached[block] = None
+            self._cached.move_to_end(block)
+        else:
+            self._free.append(block)
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            self.decref(b)
+
+    def is_writable(self, block: int) -> bool:
+        """May the (single) owner write this block in place? False for
+        shared blocks and for blocks published in the prefix index —
+        those must be copied first (copy-on-write)."""
+        if block == NULL_BLOCK:
+            return False
+        return self._ref.get(block, 0) == 1 and block not in self._key
+
+    # ------------------------------------------------------------------
+    # content-hash prefix index
+    # ------------------------------------------------------------------
+
+    def _chunk_key(self, parent, chunk: Tuple[int, ...]) -> int:
+        return hash((parent, chunk))
+
+    def _lookup(self, parent, chunk: Tuple[int, ...]) -> Optional[int]:
+        """Indexed block for (parent chain, exact chunk) or None; hash
+        collisions are rejected by comparing the stored tokens."""
+        key = self._chunk_key(parent, chunk)
+        b = self._index.get(key)
+        if b is None:
+            return None
+        if self._parent.get(b) != parent or self._tokens.get(b) != chunk:
+            return None                   # hash collision -> miss
+        return b
+
+    def match_prefix(self, tokens: np.ndarray) -> PrefixMatch:
+        """Longest cached prefix of `tokens` (read-only peek: takes no
+        references). Full chunks match exactly through the chain index;
+        the remainder may partially match the first tokens of one more
+        cached block — the first divergent block, shareable with COW."""
+        if not self.block_size:
+            return PrefixMatch([], None, 0)
+        toks = [int(t) for t in tokens]
+        bs = self.block_size
+        parent = _ROOT
+        full: List[int] = []
+        for i in range(len(toks) // bs):
+            chunk = tuple(toks[i * bs:(i + 1) * bs])
+            b = self._lookup(parent, chunk)
+            if b is None:
+                break
+            full.append(b)
+            parent = self._chunk_key(parent, chunk)
+        if len(full) < len(toks) // bs:   # diverged inside full chunks
+            rest = tuple(toks[len(full) * bs:(len(full) + 1) * bs])
+        else:
+            rest = tuple(toks[len(full) * bs:])
+        best, best_len = None, 0
+        for cand in self._children.get(parent, ()):
+            stored = self._tokens[cand]
+            d = 0
+            for a, c in zip(rest, stored):
+                if a != c:
+                    break
+                d += 1
+            if d > best_len:
+                best, best_len = cand, d
+        if best is not None and best in full:
+            best, best_len = None, 0      # already counted as a full match
+        return PrefixMatch(full, best, best_len)
+
+    def share(self, match: PrefixMatch) -> None:
+        """Commit a match: take one reference on every matched block
+        (revives cached-free blocks). Call before the blocks can be
+        evicted by a concurrent alloc."""
+        for b in match.blocks():
+            self.incref(b)
+
+    def unshare(self, match: PrefixMatch) -> None:
+        for b in match.blocks():
+            self.decref(b)
+
+    def touch(self, blocks: Sequence[int]) -> None:
+        """LRU-touch cached-free blocks (a hit makes them hot)."""
+        for b in blocks:
+            if b in self._cached:
+                self._cached.move_to_end(b)
+
+    def register_prefix(self, tokens: np.ndarray,
+                        blocks: Sequence[int]) -> int:
+        """Publish a prompt's FULL blocks in the index (after its prefill
+        completed). `blocks` are the prompt's physical blocks in table
+        order. Chunks already indexed keep their canonical block; the
+        sequence's duplicate stays private. Returns #newly indexed."""
+        if not self.block_size:
+            return 0
+        toks = [int(t) for t in tokens]
+        bs = self.block_size
+        parent = _ROOT
+        added = 0
+        for i in range(len(toks) // bs):
+            chunk = tuple(toks[i * bs:(i + 1) * bs])
+            key = self._chunk_key(parent, chunk)
+            existing = self._lookup(parent, chunk)
+            if existing is None and key not in self._index:
+                b = blocks[i]
+                if b in self._key:        # already published under a
+                    parent = key          # different chain — leave it
+                    continue
+                self._index[key] = b
+                self._key[b] = key
+                self._parent[b] = parent
+                self._tokens[b] = chunk
+                self._children.setdefault(parent, set()).add(b)
+                added += 1
+            parent = key
+        return added
+
+    def _unregister(self, block: int) -> None:
+        key = self._key.pop(block, None)
+        if key is None:
+            return
+        self._index.pop(key, None)
+        parent = self._parent.pop(block, None)
+        self._tokens.pop(block, None)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.discard(block)
+            if not kids:
+                del self._children[parent]
+
+    def reset_prefix_cache(self) -> None:
+        """Drop the whole index; cached-free blocks return to the free
+        list. Live shared blocks stay shared (their refcounts are
+        untouched) but are no longer discoverable."""
+        for b in list(self._key):
+            self._unregister(b)
+        while self._cached:
+            b, _ = self._cached.popitem(last=False)
+            self._free.append(b)

@@ -1,92 +1,77 @@
-"""Continuous-batching serving engine: slot-scheduled decode over paged KV.
+"""Continuous-batching serving engine: a thin facade over three layers.
 
 The paper's tradeoff — hold a batch, amortize fixed costs over it, pay
-synchronization only at coarse boundaries — applied to inference: the
-engine holds a fixed-width decode batch of `num_slots` lanes; requests
-queue, a scheduler admits them into free lanes, finished sequences are
-evicted and replaced mid-flight so the batch stays full under sustained
-load. Host<->device synchronization happens once per decode iteration for
-the whole batch (one jitted dispatch), never per sequence.
+synchronization only at coarse boundaries — applied to inference. The
+engine composes:
+
+  scheduler.Scheduler      queue, admission policy, request lifecycle,
+                           eviction, copy-on-write orchestration
+  block_manager.BlockAllocator
+                           refcounted physical blocks + content-hash
+                           prefix index (shared prompt blocks, COW)
+  runner.ModelRunner       jitted bucketed batched prefill / decode
+                           dispatch, device block tables, sampling
 
 Request lifecycle:
-  queued -> admitted (blocks reserved, prompt prefilled in ONE jit call,
-  first token sampled from the prefill logits) -> decoding (one lane of the
-  batched decode_step_paged per iteration) -> finished (max_new_tokens or
-  eos) -> evicted (blocks + lane recycled).
+  queued -> admitted (blocks reserved; cached prefix blocks shared by
+  refcount; the prompt suffix prefilled in ONE batched jit dispatch
+  together with other same-bucket prompts; first token sampled from the
+  prefill logits) -> decoding (one lane of the batched decode_step_paged
+  per iteration) -> finished (max_new_tokens or eos) -> evicted (block
+  refs dropped — shared prompt blocks stay warm for future hits).
 
-Admission reserves ceil((prompt + max_new) / block_size) blocks up front,
-so an admitted request can never deadlock on cache memory (vLLM's
-conservative-reservation mode); admission blocks on either lanes or
-blocks running out.
-
-All jitted state is donated, so pools update in place instead of being
-copied every step.
+Prefix caching shares immutable prompt blocks across sequences and is
+available for pure-attention block patterns; recurrent mixers (rwkv /
+rec) carry dense per-slot state that is not block-structured, so the
+engine auto-disables it there (requesting it explicitly raises).
+Bucketed prefill works for every architecture: right-padded rows are
+length-masked (see models/lm.py) so recurrent final states stay exact.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
-from repro.serving import kv_cache
-from repro.serving.kv_cache import NULL_BLOCK, BlockAllocator
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (P,) int32 token ids
-    max_new_tokens: int
-    arrival: float = 0.0          # seconds on the engine clock (open loop)
-    eos_id: Optional[int] = None
-
-
-@dataclasses.dataclass
-class Completion:
-    rid: int
-    prompt_len: int
-    tokens: np.ndarray            # (n_generated,) int32
-    arrival: float
-    t_admit: float
-    t_first_token: float
-    t_done: float
-
-
-@dataclasses.dataclass
-class _Slot:
-    req: Request
-    blocks: List[int]
-    pos: int                      # position of the next token to feed
-    pending: int                  # token to feed at `pos`
-    out: List[int]
-    t_admit: float
-    t_first: float
+from repro.serving.block_manager import BlockAllocator
+from repro.serving.kv_cache import ATTN_KINDS
+from repro.serving.runner import ModelRunner
+from repro.serving.scheduler import Completion, Request, Scheduler
 
 
 class ServingEngine:
     """Continuous-batching engine over a paged KV cache.
 
-    num_slots   decode-batch width (lanes)
-    block_size  tokens per physical KV block
-    num_blocks  pool size; default sizes the pool to num_slots sequences
-                of max_seq_len (plus the reserved null block)
-    max_seq_len hard per-sequence cap (prompt + generated)
+    num_slots          decode-batch width (lanes)
+    block_size         tokens per physical KV block
+    num_blocks         pool size; default sizes the pool to num_slots
+                       sequences of max_seq_len (plus the null block)
+    max_seq_len        hard per-sequence cap (prompt + generated)
+    prefix_cache       None = auto (on for pure-attention patterns)
+    prefill_buckets    suffix-length buckets for batched prefill
+                       (default: powers of two up to max_seq_len)
+    prefill_max_batch  max prompts per prefill dispatch
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  block_size: int = 16, max_seq_len: int = 512,
                  num_blocks: Optional[int] = None, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, prefix_cache: Optional[bool] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 prefill_max_batch: int = 4):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "serving engine currently supports text LMs only")
+        attn_only = all(k in ATTN_KINDS
+                        for k in cfg.block_pattern + cfg.prefix_pattern)
+        if prefix_cache and not attn_only:
+            raise ValueError(
+                "prefix caching requires a pure-attention block pattern "
+                "(recurrent state is per-slot, not block-structured)")
+        self.prefix_cache = attn_only if prefix_cache is None \
+            else bool(prefix_cache)
         self.cfg = cfg
         self.num_slots = num_slots
         self.block_size = block_size
@@ -94,162 +79,57 @@ class ServingEngine:
         self.max_seq_len = max_seq_len
         if num_blocks is None:
             num_blocks = 1 + num_slots * self.max_blocks_per_seq
-        self.allocator = BlockAllocator(num_blocks)
-        self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size)
-        self.state = kv_cache.init_paged_state(cfg, num_slots, num_blocks,
-                                               block_size)
-        self.temperature = temperature
-        self._key = jax.random.PRNGKey(seed)
 
-        self._queue: deque[Request] = deque()
-        self._slots: List[Optional[_Slot]] = [None] * num_slots
-        self._tables = np.zeros((num_slots, self.max_blocks_per_seq),
-                                np.int32)          # NULL_BLOCK padded
-        self._completions: List[Completion] = []
-        self._tables_dev = jnp.asarray(self._tables)  # refreshed when dirty
-        self._tables_dirty = False
+        self.allocator = BlockAllocator(num_blocks, block_size=block_size)
+        self.runner = ModelRunner(
+            params, cfg, num_slots=num_slots, block_size=block_size,
+            num_blocks=num_blocks,
+            max_blocks_per_seq=self.max_blocks_per_seq,
+            temperature=temperature, seed=seed,
+            prefill_buckets=prefill_buckets,
+            prefill_max_batch=prefill_max_batch)
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
+        self.scheduler = Scheduler(
+            self.allocator, self.runner, num_slots=num_slots,
+            block_size=block_size,
+            max_blocks_per_seq=self.max_blocks_per_seq,
+            max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
+            now_fn=self._now)
+        self.cache_bytes = self.runner.cache_bytes
         self.steps = 0                # decode iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
 
-        def _decode(state, tokens, positions, tables, key):
-            logits, state = lm.decode_step_paged(params, cfg, state, tokens,
-                                                 positions, tables)
-            if temperature > 0:
-                tok = jax.random.categorical(key, logits / temperature, -1)
-            else:
-                tok = jnp.argmax(logits, -1)
-            return tok.astype(jnp.int32), state
-
-        self._decode_fn = jax.jit(_decode, donate_argnums=(0,))
-
-        def _admit_seq(state, toks, table_row, slot):
-            # prefill + paged-cache scatter fused into ONE dispatch;
-            # returns the last-position logits for first-token sampling
-            logits, cache = lm.prefill(params, cfg, {"tokens": toks})
-            state = kv_cache.load_prefill(cfg, state, cache, slot,
-                                          table_row, block_size)
-            return logits[0, toks.shape[1] - 1], state
-
-        self._admit_fn = jax.jit(_admit_seq, donate_argnums=(0,))
-
     # ------------------------------------------------------------------
-    # queue / scheduler
+    # facade
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1 (the "
-                f"first token is sampled from the prefill logits)")
-        if len(req.prompt) + req.max_new_tokens > self.max_seq_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new "
-                f"{len(req.prompt) + req.max_new_tokens} exceeds "
-                f"max_seq_len {self.max_seq_len}")
-        self._queue.append(req)
+        self.scheduler.submit(req)
 
     @property
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        return self.scheduler.has_work
 
     def _now(self) -> float:
         """Seconds on the engine clock (fresh reading — timestamps must be
         taken AFTER the blocking device work they account for)."""
         return time.perf_counter() - self._t0
 
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self._slots):
-            if s is None:
-                return i
-        return None
-
-    def _admit(self) -> None:
-        """Move queued requests into free lanes while resources last."""
-        while self._queue:
-            slot_id = self._free_slot()
-            if slot_id is None:
-                return
-            req = self._queue[0]
-            need = -(-(len(req.prompt) + req.max_new_tokens)
-                     // self.block_size)
-            blocks = self.allocator.alloc(need)
-            if blocks is None:
-                return                      # pool exhausted; retry later
-            self._queue.popleft()
-            t_admit = self._now()
-            row = np.full(self.max_blocks_per_seq, NULL_BLOCK, np.int32)
-            row[:need] = blocks
-            self._tables[slot_id] = row
-            self._tables_dirty = True
-
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            last, self.state = self._admit_fn(self.state, toks,
-                                              jnp.asarray(row),
-                                              jnp.int32(slot_id))
-            if self.temperature > 0:
-                self._key, sub = jax.random.split(self._key)
-                first = int(jax.random.categorical(
-                    sub, last / self.temperature, -1))
-            else:
-                first = int(jnp.argmax(last, -1))
-            # int() above blocks on the prefill, so TTFT includes it
-            self._slots[slot_id] = _Slot(
-                req=req, blocks=blocks, pos=len(req.prompt), pending=first,
-                out=[first], t_admit=t_admit, t_first=self._now())
-            self._maybe_finish(slot_id)
-
-    def _maybe_finish(self, slot_id: int) -> None:
-        s = self._slots[slot_id]
-        done = (len(s.out) >= s.req.max_new_tokens
-                or (s.req.eos_id is not None and s.out
-                    and s.out[-1] == s.req.eos_id))
-        if not done:
-            return
-        self._completions.append(Completion(
-            rid=s.req.rid, prompt_len=len(s.req.prompt),
-            tokens=np.asarray(s.out, np.int32), arrival=s.req.arrival,
-            t_admit=s.t_admit, t_first_token=s.t_first,
-            t_done=self._now()))
-        self.allocator.free(s.blocks)
-        self._tables[slot_id] = NULL_BLOCK
-        self._tables_dirty = True
-        self._slots[slot_id] = None
-
-    # ------------------------------------------------------------------
-    # decode
-    # ------------------------------------------------------------------
+    def reset_prefix_cache(self) -> None:
+        """Drop cached prompt blocks (e.g. between benchmark runs)."""
+        self.allocator.reset_prefix_cache()
 
     def step(self) -> None:
         """One engine iteration: admit, then one batched decode step."""
-        self._admit()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
-        if not active:
+        self.scheduler.admit()
+        batch = self.scheduler.prepare_decode()
+        if batch is None:
             return
-        tokens = np.zeros(self.num_slots, np.int32)
-        positions = np.zeros(self.num_slots, np.int32)
-        for i in active:
-            tokens[i] = self._slots[i].pending
-            positions[i] = self._slots[i].pos
-        if self.temperature > 0:
-            self._key, sub = jax.random.split(self._key)
-        else:
-            sub = self._key          # unused by the greedy trace
-        if self._tables_dirty:
-            self._tables_dev = jnp.asarray(self._tables)
-            self._tables_dirty = False
-        next_tok, self.state = self._decode_fn(
-            self.state, jnp.asarray(tokens), jnp.asarray(positions),
-            self._tables_dev, sub)
-        next_tok = np.asarray(next_tok)
+        tokens, positions, active = batch
+        next_tok = self.runner.decode(tokens, positions)
         self.steps += 1
         self.busy_lane_steps += len(active)
-        for i in active:
-            s = self._slots[i]
-            s.pos += 1
-            s.pending = int(next_tok[i])
-            s.out.append(s.pending)
-            self._maybe_finish(i)
+        self.scheduler.consume(active, next_tok)
 
     def run(self, requests: Sequence[Request]) -> List[Completion]:
         """Drain `requests` (open loop: each enters the queue at its
@@ -259,6 +139,9 @@ class ServingEngine:
         self._t0 = time.perf_counter()
         self.steps = 0
         self.busy_lane_steps = 0
+        self.scheduler.reset_stats()      # telemetry is per run
+        self.runner.reset_stats()
+        self.allocator.cache_evictions = 0
         while idx < len(pending) or self.has_work:
             now = self._now()
             while idx < len(pending) and pending[idx].arrival <= now:
@@ -270,7 +153,7 @@ class ServingEngine:
                 continue
             self.step()
         self.wall_time = self._now()
-        done, self._completions = self._completions, []
+        done, self.scheduler.completions = self.scheduler.completions, []
         return done
 
 
@@ -278,22 +161,63 @@ class ServingEngine:
 # synthetic open-loop traffic + telemetry
 # ----------------------------------------------------------------------------
 
-def synthetic_requests(n: int, *, vocab_size: int, prompt_len: int = 64,
+def _sample_lengths(rng, spec: Union[int, Tuple[int, int]], n: int):
+    """Fixed length (int) or uniform-inclusive mixed lengths (lo, hi)."""
+    if isinstance(spec, (tuple, list)):
+        lo, hi = spec
+        return rng.integers(lo, hi + 1, n)
+    return np.full(n, int(spec))
+
+
+def _arrivals(rng, n: int, rate: float):
+    if np.isinf(rate):
+        return np.zeros(n)
+    return np.cumsum(rng.exponential(1.0 / rate, n))
+
+
+def synthetic_requests(n: int, *, vocab_size: int,
+                       prompt_len: Union[int, Tuple[int, int]] = 64,
                        max_new: tuple = (8, 32), rate: float = float("inf"),
                        seed: int = 0) -> List[Request]:
     """Open-loop workload: Poisson arrivals at `rate` req/s (inf = all at
-    t=0), random prompts, uniform generation lengths in `max_new`."""
+    t=0), random prompts, uniform generation lengths in `max_new`.
+    `prompt_len` may be an int (fixed) or a (lo, hi) range (mixed-length
+    traffic — exercises the prefill length buckets)."""
     rng = np.random.default_rng(seed)
-    if np.isinf(rate):
-        arrivals = np.zeros(n)
-    else:
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    arrivals = _arrivals(rng, n, rate)
+    plens = _sample_lengths(rng, prompt_len, n)
     lo, hi = max_new
     return [Request(
         rid=i,
-        prompt=rng.integers(0, vocab_size, prompt_len).astype(np.int32),
+        prompt=rng.integers(0, vocab_size, int(plens[i])).astype(np.int32),
         max_new_tokens=int(rng.integers(lo, hi + 1)),
         arrival=float(arrivals[i])) for i in range(n)]
+
+
+def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int = 48,
+                           suffix_len: Union[int, Tuple[int, int]] = (4, 16),
+                           max_new: tuple = (8, 32), n_prefixes: int = 1,
+                           rate: float = float("inf"),
+                           seed: int = 0) -> List[Request]:
+    """Shared-prefix workload: every prompt is one of `n_prefixes` common
+    system prompts of `prefix_len` tokens followed by a random per-request
+    suffix — the canonical prefix-cache scenario (identical prompt-prefix
+    blocks shared across sequences, copy-on-write at the divergence)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab_size, prefix_len).astype(np.int32)
+                for _ in range(max(n_prefixes, 1))]
+    arrivals = _arrivals(rng, n, rate)
+    slens = _sample_lengths(rng, suffix_len, n)
+    lo, hi = max_new
+    out = []
+    for i in range(n):
+        suffix = rng.integers(0, vocab_size, int(slens[i])).astype(np.int32)
+        out.append(Request(
+            rid=i,
+            prompt=np.concatenate([prefixes[i % len(prefixes)], suffix]),
+            max_new_tokens=int(rng.integers(lo, hi + 1)),
+            arrival=float(arrivals[i])))
+    return out
 
 
 def summarize(completions: Sequence[Completion], wall: float,
@@ -328,4 +252,21 @@ def summarize(completions: Sequence[Completion], wall: float,
             stats["slot_occupancy"] = round(
                 engine.busy_lane_steps / (engine.steps * engine.num_slots),
                 3)
+        sched, runner = engine.scheduler, engine.runner
+        stats["prefill"] = {
+            "dispatches": runner.prefill_dispatches,
+            "shapes": len(runner.prefill_shapes),
+            "buckets": (len(runner.prefill_buckets)
+                        * len(runner.width_buckets)),
+            "prompt_tokens": sched.prompt_tokens,
+            "computed_tokens": runner.prefill_computed_tokens,
+            "cached_tokens": sched.cached_prompt_tokens,
+            "padded_tokens": runner.prefill_padded_tokens,
+        }
+        stats["prefix_cache"] = {
+            "enabled": engine.prefix_cache,
+            "hit_requests": sched.prefix_hit_requests,
+            "block_copies": runner.block_copies,
+            "evictions": engine.allocator.cache_evictions,
+        }
     return stats

@@ -20,57 +20,18 @@ Layer-state layout (mirrors models/lm.init_decode_state):
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+# BlockAllocator grew refcounts + the prefix-cache index and moved to its
+# own layer; re-exported here for backward compatibility.
+from repro.serving.block_manager import NULL_BLOCK, BlockAllocator  # noqa: F401
 
-NULL_BLOCK = 0
-
-_ATTN_KINDS = ("attn", "attn_local", "moe")
-
-
-class BlockAllocator:
-    """Free-list allocator over the physical block pool.
-
-    Invariants (tested under random admit/evict churn):
-      * a block is owned by at most one sequence at a time,
-      * alloc returns None (not a partial grant) when short,
-      * freeing unowned blocks / the null block raises.
-    """
-
-    def __init__(self, num_blocks: int):
-        if num_blocks < 2:
-            raise ValueError("need >= 2 blocks (block 0 is reserved)")
-        self.num_blocks = num_blocks
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
-        self._used: set = set()
-
-    @property
-    def num_free(self) -> int:
-        return len(self._free)
-
-    def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop n blocks, or None if the pool can't cover the request."""
-        if n < 0:
-            raise ValueError(n)
-        if n > len(self._free):
-            return None
-        blocks = [self._free.pop() for _ in range(n)]
-        self._used.update(blocks)
-        return blocks
-
-    def free(self, blocks: Sequence[int]) -> None:
-        for b in blocks:
-            if b == NULL_BLOCK:
-                raise ValueError("cannot free the reserved null block")
-            if b not in self._used:
-                raise ValueError(f"double free / unowned block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+# block kinds whose KV lives in the paged pools (canonical set —
+# the engine's prefix-cache gate and copy_block both key off it)
+ATTN_KINDS = ("attn", "attn_local", "moe")
 
 
 def init_paged_state(cfg: ModelConfig, num_slots: int, num_blocks: int,
@@ -79,7 +40,7 @@ def init_paged_state(cfg: ModelConfig, num_slots: int, num_blocks: int,
     dt = cfg.act_dtype
 
     def layer_state(kind):
-        if kind in _ATTN_KINDS:
+        if kind in ATTN_KINDS:
             shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
             return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
         return lm._init_block_state(cfg, kind, num_slots, 0, dt)
@@ -96,17 +57,45 @@ def init_paged_state(cfg: ModelConfig, num_slots: int, num_blocks: int,
 
 def paged_bytes(cfg: ModelConfig, num_blocks: int, block_size: int) -> int:
     """Attention-cache bytes of the pool (the memory the paging bounds)."""
-    n_attn = (sum(k in _ATTN_KINDS for k in cfg.prefix_pattern)
-              + cfg.n_super * sum(k in _ATTN_KINDS
+    n_attn = (sum(k in ATTN_KINDS for k in cfg.prefix_pattern)
+              + cfg.n_super * sum(k in ATTN_KINDS
                                   for k in cfg.block_pattern))
     per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * cfg.act_dtype.itemsize
     return n_attn * num_blocks * block_size * per_tok
+
+
+def copy_block(cfg: ModelConfig, state, src, dst):
+    """Copy one physical block's K/V in every attention pool (src/dst are
+    traced int32 block ids, so one jitted instance serves all copies).
+    The copy-on-write primitive: a sequence that must write into a shared
+    prompt block gets a private copy first (see serving/scheduler.py).
+    Recurrent slot state is untouched — it is per-slot, never shared."""
+
+    def copy_layer(kind, st, stacked):
+        if kind not in ATTN_KINDS:
+            return st
+        if stacked:
+            return {"k": st["k"].at[:, dst].set(st["k"][:, src]),
+                    "v": st["v"].at[:, dst].set(st["v"][:, src])}
+        return {"k": st["k"].at[dst].set(st["k"][src]),
+                "v": st["v"].at[dst].set(st["v"][src])}
+
+    new_prefix = [copy_layer(kind, st, False)
+                  for kind, st in zip(cfg.prefix_pattern, state["prefix"])]
+    new_blocks = {f"p{pi}": copy_layer(kind, state["blocks"][f"p{pi}"], True)
+                  for pi, kind in enumerate(cfg.block_pattern)}
+    return {"prefix": new_prefix, "blocks": new_blocks}
 
 
 def load_prefill(cfg: ModelConfig, state, cache, slot, table_row,
                  block_size: int):
     """Scatter one sequence's prefill cache (lm.prefill, batch=1) into the
     paged slot state.
+
+    The engine's admission path fuses prefill and this scatter in
+    `lm.prefill_paged`; this standalone per-sequence loader is the
+    reference oracle it is tested against (tests/test_serving.py) and
+    the library route for seeding paged state outside the engine.
 
     `slot` (int32 scalar) and `table_row` ((max_blocks,) int32) are traced,
     so one jitted instance serves every slot; the prompt length is static
@@ -119,7 +108,7 @@ def load_prefill(cfg: ModelConfig, state, cache, slot, table_row,
         return table_row[pos // block_size], pos % block_size
 
     def load_layer(kind, st, ca, stacked):
-        if kind in _ATTN_KINDS:
+        if kind in ATTN_KINDS:
             # ca k/v: (B=1, P, KV, hd), stacked: (n_super, 1, P, KV, hd)
             n_tok = ca["k"].shape[2] if stacked else ca["k"].shape[1]
             blk, off = attn_positions(n_tok)

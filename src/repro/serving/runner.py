@@ -1,0 +1,220 @@
+"""Model runner: jitted device dispatch for the serving engine.
+
+The bottom layer of the engine (scheduler -> block manager -> runner).
+It owns everything that touches the device: the paged KV state, the
+device mirror of the block tables, the jitted prefill / decode / block-
+copy callables, and sampling. It knows nothing about queues, refcounts,
+or request lifecycle — the scheduler hands it fully-resolved work
+(token rows, table rows, slot ids) and gets tokens back.
+
+Bucketed batched prefill: queued prompts are padded to a small set of
+power-of-two suffix-length buckets and dispatched several at a time
+through `lm.prefill_paged` (batch width is also bucketed to powers of
+two, padded with inert rows that write only the null block). One jitted
+instance serves every batch with the same (width, length) bucket, so
+the number of prefill compilations is bounded by
+len(width_buckets) * len(length_buckets) — not by the number of
+distinct prompt lengths in the workload, which is what made the
+one-sequence-per-jit-call admission path recompile-heavy under mixed
+traffic. `prefill_shapes` records the distinct compiled shapes so
+benchmarks can assert the bound.
+
+All jitted state is donated, so pools update in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serving import kv_cache
+from repro.serving.block_manager import NULL_BLOCK
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class PrefillRow:
+    """One sequence of a prefill batch, fully resolved by the scheduler:
+    suffix tokens to compute, how much of the prompt is cache-hit, and
+    where the results land."""
+    tokens: np.ndarray          # (P,) the FULL prompt, int32
+    cached_len: int             # prompt tokens already present in blocks
+    slot: int                   # decode lane (recurrent state index)
+    table_row: np.ndarray       # (max_blocks,) int32, NULL padded
+
+    @property
+    def start(self) -> int:     # first computed position
+        return min(self.cached_len, len(self.tokens) - 1)
+
+    @property
+    def suffix_len(self) -> int:
+        return len(self.tokens) - self.start
+
+
+class ModelRunner:
+    """Owns device state + jitted dispatch. See module docstring."""
+
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
+                 block_size: int, num_blocks: int, max_blocks_per_seq: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 prefill_max_batch: int = 4):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self.state = kv_cache.init_paged_state(cfg, num_slots, num_blocks,
+                                               block_size)
+        self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size)
+
+        max_len = max_blocks_per_seq * block_size
+        if prefill_buckets:
+            self.prefill_buckets = sorted(set(int(b) for b in prefill_buckets))
+        else:
+            self.prefill_buckets, b = [], min(16, next_pow2(max_len))
+            while b < max_len:
+                self.prefill_buckets.append(b)
+                b *= 2
+        if not self.prefill_buckets or self.prefill_buckets[-1] < max_len:
+            self.prefill_buckets.append(next_pow2(max_len))
+        self.prefill_max_batch = max(1, prefill_max_batch)
+        self.width_buckets = []
+        w = 1
+        while w < self.prefill_max_batch:
+            self.width_buckets.append(w)
+            w *= 2
+        self.width_buckets.append(self.prefill_max_batch)
+
+        # host tables + device mirror (refreshed lazily when dirty)
+        self._tables = np.zeros((num_slots, max_blocks_per_seq), np.int32)
+        self._tables_dev = jnp.asarray(self._tables)
+        self._tables_dirty = False
+
+        # telemetry; prefill_shapes is process-cumulative (compilations
+        # persist across runs), the counters are reset per run
+        self.prefill_shapes: set = set()     # distinct (width, Ls) dispatched
+        self.reset_stats()
+
+        def _decode(state, tokens, positions, tables, key):
+            logits, state = lm.decode_step_paged(params, cfg, state, tokens,
+                                                 positions, tables)
+            if temperature > 0:
+                tok = jax.random.categorical(key, logits / temperature, -1)
+            else:
+                tok = jnp.argmax(logits, -1)
+            return tok.astype(jnp.int32), state
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(0,))
+
+        def _prefill(state, toks, lengths, cached, rows, slots):
+            return lm.prefill_paged(params, cfg, state, toks, lengths,
+                                    cached, rows, slots)
+
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(0,))
+
+        def _copy(state, src, dst):
+            return kv_cache.copy_block(cfg, state, src, dst)
+
+        self._copy_fn = jax.jit(_copy, donate_argnums=(0,))
+
+    def reset_stats(self) -> None:
+        self.prefill_dispatches = 0
+        self.prefill_padded_tokens = 0       # token slots incl. padding
+        self.prefill_computed_tokens = 0     # true suffix tokens computed
+        self.block_copies = 0
+
+    # ------------------------------------------------------------------
+    # block tables
+    # ------------------------------------------------------------------
+
+    def write_table(self, slot: int, row: np.ndarray) -> None:
+        self._tables[slot] = row
+        self._tables_dirty = True
+
+    def clear_table(self, slot: int) -> None:
+        self._tables[slot] = NULL_BLOCK
+        self._tables_dirty = True
+
+    def _tables_device(self):
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(self._tables)
+            self._tables_dirty = False
+        return self._tables_dev
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+
+    def suffix_bucket(self, n: int) -> int:
+        """Smallest configured length bucket covering n suffix tokens."""
+        for b in self.prefill_buckets:
+            if b >= n:
+                return b
+        return self.prefill_buckets[-1]
+
+    def prefill(self, rows: List[PrefillRow]) -> np.ndarray:
+        """Run one bucketed batched prefill and sample each row's first
+        token from its true-last-position logits. Blocks until done (the
+        caller's TTFT clock covers it). Returns (len(rows),) int32."""
+        n = len(rows)
+        ls = self.suffix_bucket(max(r.suffix_len for r in rows))
+        width = next((w for w in self.width_buckets if w >= n), n)
+        toks = np.zeros((width, ls), np.int32)
+        lengths = np.zeros(width, np.int32)
+        cached = np.zeros(width, np.int32)
+        tables = np.full((width, self.max_blocks_per_seq), NULL_BLOCK,
+                         np.int32)
+        slots = np.full(width, self.num_slots, np.int32)   # pad rows drop
+        for i, r in enumerate(rows):
+            suf = r.tokens[r.start:]
+            toks[i, :len(suf)] = suf
+            lengths[i] = len(r.tokens)
+            cached[i] = r.cached_len
+            tables[i] = r.table_row
+            slots[i] = r.slot
+        self.prefill_shapes.add((width, ls))
+        self.prefill_dispatches += 1
+        self.prefill_padded_tokens += width * ls
+        self.prefill_computed_tokens += sum(r.suffix_len for r in rows)
+
+        last, self.state = self._prefill_fn(
+            self.state, jnp.asarray(toks), jnp.asarray(lengths),
+            jnp.asarray(cached), jnp.asarray(tables), jnp.asarray(slots))
+        last = last[:n]
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            first = jax.random.categorical(sub, last / self.temperature, -1)
+            return np.asarray(first, np.int32)
+        return np.asarray(jnp.argmax(last, -1), np.int32)
+
+    def decode(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+        """One batched decode step over all lanes. tokens/positions:
+        (num_slots,) int32 host arrays. Returns sampled (num_slots,)."""
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+        else:
+            sub = self._key              # unused by the greedy trace
+        next_tok, self.state = self._decode_fn(
+            self.state, jnp.asarray(tokens), jnp.asarray(positions),
+            self._tables_device(), sub)
+        return np.asarray(next_tok)
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """Device-side copy-on-write: clone block `src`'s K/V into `dst`
+        in every attention pool."""
+        self.state = self._copy_fn(self.state, jnp.int32(src),
+                                   jnp.int32(dst))
+        self.block_copies += 1

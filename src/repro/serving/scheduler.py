@@ -1,0 +1,298 @@
+"""Scheduler: queue, admission policy, request lifecycle, eviction.
+
+The top layer of the serving engine (scheduler -> block manager ->
+runner). It owns every request-level decision and no device state:
+
+  * FCFS queue with bucketed batch formation — admission picks the
+    oldest waiting request, peeks its prefix-cache match to find its
+    suffix-length bucket, then collects further queued requests that
+    fall in the SAME bucket (bounded queue-jumping: other buckets keep
+    their place) until slots, blocks, or the prefill batch width run
+    out. The whole group is admitted in ONE `runner.prefill` dispatch.
+  * conservative block reservation — ceil((prompt + max_new) /
+    block_size) blocks per request minus fully-shared prefix blocks, so
+    an admitted request can never deadlock on cache memory. A shared
+    first-divergent block is counted as needing its copy-on-write
+    replacement up front, so the later copy can never fail.
+  * prefix sharing + copy-on-write — matched full blocks are shared by
+    refcount; a partially-matched (first divergent) block is shared and
+    then copied before its first write: eagerly at admission when the
+    prompt itself diverges mid-block, lazily at the first decode step
+    when the whole prompt was cached and only generation writes into it.
+  * lifecycle + eviction — finished sequences (max_new_tokens or eos)
+    are evicted: their table row is nulled, their lane freed, and every
+    block reference dropped (shared prompt blocks survive in the block
+    manager's cached-free pool for future hits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+import numpy as np
+
+from repro.serving.block_manager import (NULL_BLOCK, BlockAllocator,
+                                         PrefixMatch)
+from repro.serving.runner import ModelRunner, PrefillRow
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0          # seconds on the engine clock (open loop)
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray            # (n_generated,) int32
+    arrival: float
+    t_admit: float
+    t_first_token: float
+    t_done: float
+    cached_tokens: int = 0        # prompt tokens served from the prefix cache
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    table_row: np.ndarray         # (max_blocks,) int32, NULL padded
+    pos: int                      # position of the next token to feed
+    pending: int                  # token to feed at `pos`
+    out: List[int]
+    t_admit: float
+    t_first: float
+    cached: int                   # prefix-cache hit tokens at admission
+    cow_block: Optional[int]      # reserved private copy for the shared
+    cow_index: int = -1           # first-divergent block (lazy COW)
+
+
+@dataclasses.dataclass
+class _Plan:
+    """A reserved admission: blocks held, table row built, ready for one
+    row of a batched prefill dispatch."""
+    req: Request
+    table_row: np.ndarray
+    slot: int
+    cached: int
+    cow_block: Optional[int]
+    cow_index: int
+    t_admit: float
+
+    @property
+    def suffix_len(self) -> int:
+        return len(self.req.prompt) - min(self.cached,
+                                          len(self.req.prompt) - 1)
+
+
+class Scheduler:
+    """Request lifecycle over a BlockAllocator and a ModelRunner."""
+
+    def __init__(self, allocator: BlockAllocator, runner: ModelRunner, *,
+                 num_slots: int, block_size: int, max_blocks_per_seq: int,
+                 max_seq_len: int, prefix_cache: bool,
+                 now_fn: Callable[[], float]):
+        self.allocator = allocator
+        self.runner = runner
+        self.num_slots = num_slots
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.max_seq_len = max_seq_len
+        self.prefix_cache = prefix_cache
+        self._now = now_fn
+        self._queue: Deque[Request] = deque()
+        self._slots: List[Optional[_Slot]] = [None] * num_slots
+        self.completions: List[Completion] = []
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        self.prompt_tokens = 0
+        self.cached_prompt_tokens = 0
+        self.prefix_hit_requests = 0
+
+    # ------------------------------------------------------------------
+    # queue
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 (the "
+                f"first token is sampled from the prefill logits)")
+        if len(req.prompt) + req.max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{len(req.prompt) + req.max_new_tokens} exceeds "
+                f"max_seq_len {self.max_seq_len}")
+        self._queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def _match(self, req: Request) -> PrefixMatch:
+        if not self.prefix_cache:
+            return PrefixMatch([], None, 0)
+        return self.allocator.match_prefix(req.prompt)
+
+    def _reserve(self, req: Request, slot: int,
+                 match: PrefixMatch) -> Optional[_Plan]:
+        """Share the matched prefix blocks, allocate the rest, build the
+        table row. Returns None (nothing held) if the pool is short."""
+        P = len(req.prompt)
+        total = -(-(P + req.max_new_tokens) // self.block_size)
+        f = len(match.full_blocks)
+        self.allocator.share(match)       # revive + hold before alloc
+        fresh = self.allocator.alloc(total - f)
+        if fresh is None:
+            self.allocator.unshare(match)
+            return None
+        row = np.full(self.max_blocks_per_seq, NULL_BLOCK, np.int32)
+        row[:f] = match.full_blocks
+        cached = f * self.block_size + match.partial_len
+        cow_block, cow_index = None, -1
+        rest = fresh
+        if match.partial_block is not None:
+            if match.partial_len == P - f * self.block_size:
+                # whole prompt cached up to this block: keep sharing it;
+                # generation's first write will trigger the lazy copy
+                row[f] = match.partial_block
+                cow_block, cow_index = fresh[0], f
+            else:
+                # prompt diverges mid-block: copy now, prefill writes it
+                self.runner.copy_block(match.partial_block, fresh[0])
+                self.allocator.decref(match.partial_block)
+                row[f] = fresh[0]
+            rest = fresh[1:]
+            row[f + 1:f + 1 + len(rest)] = rest
+        else:
+            row[f:f + len(fresh)] = fresh
+        self.prompt_tokens += P
+        self.cached_prompt_tokens += min(cached, P - 1)
+        if cached > 0:
+            self.prefix_hit_requests += 1
+            self.allocator.touch(match.full_blocks)
+        return _Plan(req=req, table_row=row, slot=slot, cached=cached,
+                     cow_block=cow_block, cow_index=cow_index,
+                     t_admit=self._now())
+
+    def admit(self) -> None:
+        """Form same-bucket groups from the queue and admit each group
+        in one batched prefill dispatch, while lanes and blocks last."""
+        while True:
+            free = self._free_slots()
+            if not free or not self._queue:
+                return
+            cap = min(len(free), self.runner.prefill_max_batch)
+            plans: List[_Plan] = []
+            bucket = None
+            skipped: List[Request] = []
+            while self._queue and len(plans) < cap:
+                req = self._queue[0]
+                match = self._match(req)  # peek: takes no references
+                suf = len(req.prompt) - min(
+                    match.tokens(self.block_size), len(req.prompt) - 1)
+                b = self.runner.suffix_bucket(suf)
+                if bucket is not None and b != bucket:
+                    skipped.append(self._queue.popleft())
+                    continue
+                plan = self._reserve(req, free[len(plans)], match)
+                if plan is None:
+                    break                 # pool exhausted; retry later
+                self._queue.popleft()
+                plans.append(plan)
+                bucket = b
+            for req in reversed(skipped):
+                self._queue.appendleft(req)
+            if not plans:
+                return
+            self._dispatch(plans)
+
+    def _dispatch(self, plans: List[_Plan]) -> None:
+        rows = [PrefillRow(tokens=np.asarray(p.req.prompt, np.int32),
+                           cached_len=p.cached, slot=p.slot,
+                           table_row=p.table_row) for p in plans]
+        first = self.runner.prefill(rows)   # blocks: TTFT covers it
+        t_first = self._now()
+        for p, tok in zip(plans, first):
+            P = len(p.req.prompt)
+            if self.prefix_cache:
+                self.allocator.register_prefix(
+                    p.req.prompt, [int(b) for b in p.table_row])
+            self.runner.write_table(p.slot, p.table_row)
+            self._slots[p.slot] = _Slot(
+                req=p.req, table_row=p.table_row, pos=P, pending=int(tok),
+                out=[int(tok)], t_admit=p.t_admit, t_first=t_first,
+                cached=p.cached, cow_block=p.cow_block,
+                cow_index=p.cow_index)
+            self._maybe_finish(p.slot)
+
+    # ------------------------------------------------------------------
+    # decode-side lifecycle
+    # ------------------------------------------------------------------
+
+    def prepare_decode(self):
+        """Assemble the decode batch; fire pending lazy copy-on-writes
+        (a slot about to write into a still-shared first-divergent block
+        swaps in its reserved private copy first). Returns (tokens,
+        positions, active slot ids) or None when no lane is active."""
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return None
+        tokens = np.zeros(self.num_slots, np.int32)
+        positions = np.zeros(self.num_slots, np.int32)
+        for i in active:
+            s = self._slots[i]
+            if s.cow_block is not None:
+                old = int(s.table_row[s.cow_index])
+                self.runner.copy_block(old, s.cow_block)
+                self.allocator.decref(old)
+                s.table_row[s.cow_index] = s.cow_block
+                self.runner.write_table(i, s.table_row)
+                s.cow_block = None
+            tokens[i] = s.pending
+            positions[i] = s.pos
+        return tokens, positions, active
+
+    def consume(self, active: List[int], next_tok: np.ndarray) -> None:
+        """Advance each active lane with its sampled token; finish and
+        evict lanes that hit max_new_tokens or eos."""
+        for i in active:
+            s = self._slots[i]
+            s.pos += 1
+            s.pending = int(next_tok[i])
+            s.out.append(s.pending)
+            self._maybe_finish(i)
+
+    def _maybe_finish(self, slot_id: int) -> None:
+        s = self._slots[slot_id]
+        done = (len(s.out) >= s.req.max_new_tokens
+                or (s.req.eos_id is not None and s.out
+                    and s.out[-1] == s.req.eos_id))
+        if not done:
+            return
+        self.completions.append(Completion(
+            rid=s.req.rid, prompt_len=len(s.req.prompt),
+            tokens=np.asarray(s.out, np.int32), arrival=s.req.arrival,
+            t_admit=s.t_admit, t_first_token=s.t_first,
+            t_done=self._now(), cached_tokens=min(s.cached,
+                                                  len(s.req.prompt) - 1)))
+        for b in s.table_row:
+            if b != NULL_BLOCK:
+                self.allocator.decref(int(b))
+        if s.cow_block is not None:       # reserved but never written
+            self.allocator.decref(s.cow_block)
+        self.runner.clear_table(slot_id)
+        self._slots[slot_id] = None

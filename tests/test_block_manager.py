@@ -1,0 +1,263 @@
+"""Refcounted BlockAllocator: property tests (hypothesis) for
+alloc/free/share/copy-on-write invariants, plus deterministic unit tests
+of the prefix index (chain match, divergent-block match, LRU eviction).
+
+Invariants under random churn:
+  * refcounts never negative (decref of a dead block raises),
+  * no double free, no partial grants,
+  * conservation: num_free + live blocks == num_blocks - 1,
+  * shared (refcount > 1) or indexed blocks are never writable in place,
+  * a prefix match only ever returns blocks whose registered content
+    equals the prompt's corresponding chunk.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.block_manager import NULL_BLOCK, BlockAllocator
+
+pytestmark = pytest.mark.serving
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                   # property tests degrade gracefully
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):               # keep decorators importable
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:                         # noqa: N801 — stand-in namespace
+        @staticmethod
+        def lists(*a, **k):
+            return None
+
+        @staticmethod
+        def integers(*a, **k):
+            return None
+
+
+# ----------------------------------------------------------------------------
+# deterministic unit tests
+# ----------------------------------------------------------------------------
+
+def test_basic_refcounting():
+    alloc = BlockAllocator(8)
+    blocks = alloc.alloc(3)
+    assert len(blocks) == 3 and NULL_BLOCK not in blocks
+    assert all(alloc.refcount(b) == 1 for b in blocks)
+    assert all(alloc.is_writable(b) for b in blocks)
+    alloc.incref(blocks[0])
+    assert alloc.refcount(blocks[0]) == 2
+    assert not alloc.is_writable(blocks[0])     # shared -> copy-on-write
+    alloc.decref(blocks[0])
+    assert alloc.is_writable(blocks[0])
+    alloc.free(blocks)
+    assert alloc.num_free == 7
+    with pytest.raises(ValueError):
+        alloc.free([blocks[0]])                 # double free
+    with pytest.raises(ValueError):
+        alloc.decref(NULL_BLOCK)                # reserved null block
+    with pytest.raises(ValueError):
+        alloc.incref(blocks[1])                 # free block: not shareable
+
+
+def test_alloc_exhaustion_no_partial_grant():
+    alloc = BlockAllocator(6)
+    got = alloc.alloc(5)
+    assert got is not None and alloc.num_free == 0
+    assert alloc.alloc(1) is None
+    alloc.free(got[:2])
+    assert alloc.alloc(3) is None               # still short: nothing taken
+    assert alloc.num_free == 2
+
+
+def test_prefix_chain_match_and_partial_divergence():
+    bs = 4
+    alloc = BlockAllocator(32, block_size=bs)
+    prompt = np.arange(11, dtype=np.int32)      # 2 full blocks + 3 tail
+    blocks = alloc.alloc(3)
+    assert alloc.match_prefix(prompt).tokens(bs) == 0
+    alloc.register_prefix(prompt, blocks)       # publishes blocks 0,1 only
+    # identical prompt: both full blocks hit; the tail block was partial
+    # (never registered), so nothing more matches
+    m = alloc.match_prefix(prompt)
+    assert m.full_blocks == blocks[:2] and m.partial_block is None
+    assert m.tokens(bs) == 8
+    # a prompt diverging inside block 1 matches block 0 fully and block 1
+    # partially — the first divergent block, shareable with COW
+    div = prompt.copy()
+    div[6] = 99
+    m = alloc.match_prefix(div)
+    assert m.full_blocks == blocks[:1]
+    assert m.partial_block == blocks[1] and m.partial_len == 2
+    assert m.tokens(bs) == 6
+    # chain hashing: same chunk content under a different prefix must NOT
+    # match (block identity includes everything before it)
+    shifted = np.concatenate([[77], prompt[:10]]).astype(np.int32)
+    assert alloc.match_prefix(shifted).tokens(bs) == 0
+
+
+def test_cached_free_revival_and_lru_eviction():
+    bs = 2
+    alloc = BlockAllocator(4, block_size=bs)    # 3 usable blocks
+    prompt = np.array([1, 2, 3, 4], np.int32)
+    blocks = alloc.alloc(2)
+    alloc.register_prefix(prompt, blocks)
+    alloc.free(blocks)                          # -> cached-free, still match
+    assert alloc.num_free == 3 and alloc.num_cached == 2
+    m = alloc.match_prefix(prompt)
+    assert m.full_blocks == blocks
+    alloc.share(m)                              # revival: refcount 0 -> 1
+    assert alloc.refcount(blocks[0]) == 1
+    assert not alloc.is_writable(blocks[0])     # still published
+    alloc.unshare(m)
+    # allocation pressure evicts the LRU chain root; its indexed
+    # descendant is unreachable once the chain breaks, so the cascade
+    # unregisters and frees it in the same eviction
+    taken = alloc.alloc(3)
+    assert taken is not None and alloc.cache_evictions == 1
+    assert alloc.num_cached == 0
+    assert alloc.match_prefix(prompt).tokens(bs) == 0
+    alloc.free(taken)
+
+
+def test_reset_prefix_cache():
+    alloc = BlockAllocator(8, block_size=2)
+    prompt = np.array([5, 6, 7, 8], np.int32)
+    blocks = alloc.alloc(2)
+    alloc.register_prefix(prompt, blocks)
+    alloc.free(blocks)
+    assert alloc.num_cached == 2
+    alloc.reset_prefix_cache()
+    assert alloc.num_cached == 0 and alloc.num_free == 7
+    assert alloc.match_prefix(prompt).tokens(2) == 0
+
+
+# ----------------------------------------------------------------------------
+# property tests: random admit/share/write/evict churn
+# ----------------------------------------------------------------------------
+
+N_BLOCKS = 24
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=120))
+def test_refcount_invariants_under_churn(seeds):
+    alloc = BlockAllocator(N_BLOCKS)
+    refs = {}                                   # block -> model refcount
+    handles = []                                # each: list of held blocks
+    for s in seeds:
+        op = s % 3
+        if op == 0:                             # admit: alloc 0..4 blocks
+            got = alloc.alloc(s // 4 % 5)
+            if got is not None:
+                for b in got:
+                    refs[b] = refs.get(b, 0) + 1
+                handles.append(got)
+        elif op == 1 and handles:               # share one handle's blocks
+            h = handles[s // 4 % len(handles)]
+            for b in h:
+                alloc.incref(b)
+                refs[b] += 1
+            handles.append(list(h))
+        elif op == 2 and handles:               # finish: drop one handle
+            h = handles.pop(s // 4 % len(handles))
+            alloc.free(h)
+            for b in h:
+                refs[b] -= 1
+                if refs[b] == 0:
+                    del refs[b]
+        # invariants
+        assert all(v > 0 for v in refs.values())
+        assert all(alloc.refcount(b) == v for b, v in refs.items())
+        assert alloc.num_free + len(refs) == N_BLOCKS - 1  # conservation
+        for b, v in refs.items():
+            assert alloc.is_writable(b) == (v == 1)
+    for h in handles:                           # drain: everything returns
+        alloc.free(h)
+    assert alloc.num_free == N_BLOCKS - 1
+    with pytest.raises(ValueError):
+        alloc.decref(1)                         # refcounts never negative
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=80))
+def test_prefix_share_cow_invariants(seeds):
+    """Engine-shaped churn: admit prompts with shared prefixes through
+    match/share/alloc/register, simulate decode writes with the COW rule,
+    and check that matches only ever return content-correct blocks and
+    that shared blocks are never written in place."""
+    bs = 4
+    alloc = BlockAllocator(N_BLOCKS, block_size=bs)
+    rng_prompts = [np.array(p, np.int32) for p in (
+        [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12],  # base: 3 full blocks
+        [1, 2, 3, 4, 5, 6, 7, 8, 9, 10],  # strict prefix, ends mid-block
+        [1, 2, 3, 4, 5, 6, 9],             # diverges inside block 1 (d=2)
+        [1, 2, 3, 4],                      # exact one block
+        [7, 7, 7, 7, 7],                   # unrelated
+    )]
+    live = []           # (blocks_held, prompt)
+    content = {}        # block -> token chunk it holds (model of device KV)
+    for s in seeds:
+        op = s % 2
+        if op == 0:                              # admit
+            prompt = rng_prompts[s // 2 % len(rng_prompts)]
+            m = alloc.match_prefix(prompt)
+            # every matched block's registered content must equal the
+            # prompt's corresponding chunk (content-correct sharing)
+            for j, b in enumerate(m.full_blocks):
+                np.testing.assert_array_equal(
+                    content[b], prompt[j * bs:(j + 1) * bs])
+            if m.partial_block is not None:
+                f = len(m.full_blocks)
+                np.testing.assert_array_equal(
+                    content[m.partial_block][:m.partial_len],
+                    prompt[f * bs:f * bs + m.partial_len])
+            total = -(-(len(prompt) + 2) // bs)  # +2 generated tokens
+            alloc.share(m)
+            fresh = alloc.alloc(total - len(m.full_blocks))
+            if fresh is None:
+                alloc.unshare(m)
+                continue
+            blocks = list(m.full_blocks)
+            rest = fresh
+            if m.partial_block is not None:
+                if m.partial_len == len(prompt) - len(blocks) * bs:
+                    blocks.append(m.partial_block)   # lazy COW later
+                else:                                 # eager COW now
+                    assert not alloc.is_writable(m.partial_block)
+                    content[fresh[0]] = content[m.partial_block].copy()
+                    alloc.decref(m.partial_block)
+                    blocks.append(fresh[0])
+                    rest = fresh[1:]
+            blocks += rest
+            # "prefill": write prompt chunks into writable blocks only
+            nfull = len(prompt) // bs
+            for j in range(nfull + (1 if len(prompt) % bs else 0)):
+                b = blocks[j]
+                chunk = prompt[j * bs:(j + 1) * bs]
+                if alloc.is_writable(b):
+                    content[b] = np.array(chunk, np.int32)
+                else:       # shared: content must already be there
+                    np.testing.assert_array_equal(
+                        content[b][:len(chunk)], chunk)
+            alloc.register_prefix(prompt, blocks)
+            # "decode": first generated token writes block len(prompt)//bs
+            j = len(prompt) // bs
+            if j < len(blocks) and not alloc.is_writable(blocks[j]):
+                # lazy COW: swap in the reserved private copy (it leaves
+                # the table-order list so refs stay one-per-block)
+                repl = blocks.pop()
+                assert alloc.is_writable(repl)
+                content[repl] = content[blocks[j]].copy()
+                alloc.decref(blocks[j])
+                blocks[j] = repl
+            live.append(blocks)
+        elif live:                               # finish a sequence
+            alloc.free(live.pop(s // 2 % len(live)))
+    for blocks in live:
+        alloc.free(blocks)
+    assert alloc.num_free == N_BLOCKS - 1

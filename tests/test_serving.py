@@ -1,6 +1,9 @@
 """Serving subsystem: paged-attention kernel vs oracle, block-allocator
-invariants under churn, and engine outputs vs the legacy generate() path."""
+invariants under churn, engine outputs vs the legacy generate() path,
+prefix-cache on/off token identity, and bucketed batched prefill."""
+import os
 import random
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +15,12 @@ from repro.kernels import ref
 from repro.kernels.paged_attention import paged_attention
 from repro.launch.serve import generate
 from repro.models import attention, lm
-from repro.serving.engine import Request, ServingEngine, synthetic_requests
-from repro.serving.kv_cache import BlockAllocator
+from repro.serving.block_manager import BlockAllocator
+from repro.serving.engine import (Request, ServingEngine,
+                                  shared_prefix_requests, summarize,
+                                  synthetic_requests)
+
+pytestmark = pytest.mark.serving
 
 KEY = jax.random.PRNGKey(0)
 
@@ -238,3 +245,249 @@ def test_synthetic_requests_open_loop():
     assert all(2 <= r.max_new_tokens <= 5 for r in reqs)
     assert all(r.prompt.shape == (8,) and r.prompt.dtype == np.int32
                for r in reqs)
+
+
+def test_workload_generators_mixed_and_shared_prefix():
+    reqs = synthetic_requests(32, vocab_size=100, prompt_len=(4, 24),
+                              max_new=(2, 5), seed=1)
+    lens = {len(r.prompt) for r in reqs}
+    assert all(4 <= n <= 24 for n in lens) and len(lens) > 4
+    reqs = shared_prefix_requests(12, vocab_size=100, prefix_len=16,
+                                  suffix_len=(2, 6), max_new=(2, 4),
+                                  n_prefixes=2, seed=2)
+    p0 = reqs[0].prompt[:16]
+    p1 = reqs[1].prompt[:16]
+    assert not np.array_equal(p0, p1)          # two distinct system prompts
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.prompt[:16], p0 if i % 2 == 0
+                                      else p1)
+        assert 18 <= len(r.prompt) <= 22
+
+
+# ----------------------------------------------------------------------------
+# length-masked batched prefill (models/lm.py)
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b",
+                                  "rwkv6-3b"])
+def test_prefill_length_masked(arch):
+    """Right-padded mixed-length prefill with `lengths` must reproduce
+    each row's unpadded logits and (for recurrent mixers) final states."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lens = [5, 11, 8]
+    S = max(lens)
+    rows = [jax.random.randint(jax.random.fold_in(KEY, i), (n,), 0,
+                               cfg.vocab_size) for i, n in enumerate(lens)]
+    toks = jnp.stack([jnp.pad(r, (0, S - len(r))) for r in rows])
+    logits, cache = lm.prefill(params, cfg, {
+        "tokens": toks, "lengths": jnp.asarray(lens, jnp.int32)})
+
+    def recurrent_leaves(tree):
+        out = []
+        for kind, st in zip(cfg.prefix_pattern, tree["prefix"]):
+            if kind in ("rwkv", "rec"):
+                out.extend(jax.tree.leaves(st))
+        for pi, kind in enumerate(cfg.block_pattern):
+            if kind in ("rwkv", "rec"):
+                out.extend(jax.tree.leaves(tree["blocks"][f"p{pi}"]))
+        return out
+
+    batched_states = recurrent_leaves(cache)
+    for b, row in enumerate(rows):
+        ref_logits, ref_cache = lm.prefill(params, cfg,
+                                           {"tokens": row[None]})
+        np.testing.assert_allclose(
+            np.asarray(logits[b, lens[b] - 1]),
+            np.asarray(ref_logits[0, -1]), atol=1e-4, rtol=1e-4)
+        for got, want in zip(batched_states, recurrent_leaves(ref_cache)):
+            # leaves are (B, ...) or stacked (n_super, B, ...)
+            got_b = got[b] if got.shape[0] == len(lens) else got[:, b]
+            want_b = want[0] if want.shape[0] == 1 else want[:, 0]
+            np.testing.assert_allclose(np.asarray(got_b),
+                                       np.asarray(want_b),
+                                       atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b"])
+def test_prefill_paged_matches_per_sequence_load_prefill(arch):
+    """The fused batched path (lm.prefill_paged) must leave the paged
+    state identical to the per-sequence oracle (lm.prefill + kv_cache.
+    load_prefill) — same KV in every block it owns, same recurrent slot
+    state, same last-token logits."""
+    from repro.serving import kv_cache
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    bs, num_slots, M = 4, 2, 4
+    lens = [7, 10]
+    rows = [jax.random.randint(jax.random.fold_in(KEY, 20 + i), (n,), 0,
+                               cfg.vocab_size) for i, n in enumerate(lens)]
+    tables = np.full((2, M), 0, np.int32)
+    tables[0, :2] = [1, 2]
+    tables[1, :3] = [3, 4, 5]
+
+    oracle = kv_cache.init_paged_state(cfg, num_slots, 6, bs)
+    ref_last = []
+    for i, row in enumerate(rows):
+        logits, cache = lm.prefill(params, cfg, {"tokens": row[None]})
+        oracle = kv_cache.load_prefill(cfg, oracle, cache, jnp.int32(i),
+                                       jnp.asarray(tables[i]), bs)
+        ref_last.append(np.asarray(logits[0, lens[i] - 1]))
+
+    fused = kv_cache.init_paged_state(cfg, num_slots, 6, bs)
+    Ls = max(lens)
+    toks = jnp.stack([jnp.pad(r, (0, Ls - len(r))) for r in rows])
+    last, fused = lm.prefill_paged(
+        params, cfg, fused, toks, jnp.asarray(lens, jnp.int32),
+        jnp.zeros(2, jnp.int32), jnp.asarray(tables),
+        jnp.arange(2, dtype=jnp.int32))
+
+    np.testing.assert_allclose(np.asarray(last), np.stack(ref_last),
+                               atol=1e-4, rtol=1e-4)
+    # compare every owned block / slot; block 0 is the pad sink (skip it)
+    for got, want in zip(jax.tree.leaves(fused), jax.tree.leaves(oracle)):
+        got, want = np.asarray(got), np.asarray(want)
+        if got.shape[-4:-2] == (6, bs) or got.shape[:2] == (6, bs):
+            np.testing.assert_allclose(got[..., 1:, :, :, :]
+                                       if got.ndim == 5 else got[1:],
+                                       want[..., 1:, :, :, :]
+                                       if want.ndim == 5 else want[1:],
+                                       atol=1e-4, rtol=1e-4)
+        else:                         # recurrent slot state
+            np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+# prefix caching: token identity on/off, copy-on-write, churn
+# ----------------------------------------------------------------------------
+
+def _engine_outputs(params, cfg, reqs, **kw):
+    eng = ServingEngine(params, cfg, **kw)
+    done = eng.run(list(reqs))
+    assert len(done) == len(reqs)
+    return {c.rid: c.tokens for c in done}, eng
+
+
+def test_prefix_cache_on_off_identical_under_churn():
+    """Greedy outputs must be token-identical with the prefix cache on
+    vs off and vs generate(), with more requests than slots (admit/evict
+    churn) on a shared-prefix workload that hits every sharing path."""
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = shared_prefix_requests(9, vocab_size=cfg.vocab_size,
+                                  prefix_len=20, suffix_len=(1, 9),
+                                  max_new=(2, 7), seed=4)
+    kw = dict(num_slots=3, block_size=8, max_seq_len=48,
+              prefill_max_batch=2)
+    on, eng_on = _engine_outputs(params, cfg, reqs, prefix_cache=True, **kw)
+    off, eng_off = _engine_outputs(params, cfg, reqs, prefix_cache=False,
+                                   **kw)
+    assert eng_on.scheduler.cached_prompt_tokens > 0
+    assert eng_off.scheduler.cached_prompt_tokens == 0
+    for r in reqs:
+        exp = np.asarray(generate(params, cfg, np.asarray(r.prompt)[None],
+                                  r.max_new_tokens))[0]
+        np.testing.assert_array_equal(on[r.rid], exp)
+        np.testing.assert_array_equal(off[r.rid], exp)
+    # all blocks returned (shared ones may idle in the cached-free pool)
+    assert eng_on.allocator.num_free == eng_on.allocator.num_blocks - 1
+
+
+def test_prefix_cache_copy_on_write_paths():
+    """Eager COW (prompt diverges mid-block) and lazy COW (whole prompt
+    cached; generation writes the shared block) both fire and stay
+    token-identical to generate()."""
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, cfg.vocab_size, 27).astype(np.int32)
+    reqs = [Request(rid=0, prompt=base, max_new_tokens=4),
+            # same first 22 tokens, diverges inside block 2 -> eager COW
+            Request(rid=1, prompt=np.concatenate(
+                [base[:22], rng.integers(0, cfg.vocab_size, 5)
+                 .astype(np.int32)]), max_new_tokens=5),
+            # strict prefix ending mid-block -> fully cached -> lazy COW
+            Request(rid=2, prompt=base[:20].copy(), max_new_tokens=6)]
+    out, eng = _engine_outputs(params, cfg, reqs, num_slots=1,
+                               block_size=8, max_seq_len=64,
+                               prefix_cache=True)
+    assert eng.runner.block_copies >= 2          # one eager + one lazy
+    for r in reqs:
+        exp = np.asarray(generate(params, cfg, np.asarray(r.prompt)[None],
+                                  r.max_new_tokens))[0]
+        np.testing.assert_array_equal(out[r.rid], exp)
+
+
+def test_prefix_cache_rejected_for_recurrent_archs():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServingEngine(params, cfg, prefix_cache=True)
+    eng = ServingEngine(params, cfg, num_slots=2, block_size=4,
+                        max_seq_len=32)
+    assert not eng.prefix_cache                  # auto-gated off
+
+
+# ----------------------------------------------------------------------------
+# bucketed batched prefill
+# ----------------------------------------------------------------------------
+
+def test_bucketed_prefill_mixed_lengths_matches_generate():
+    """Mixed-length traffic: every output matches generate(), and the
+    number of distinct prefill jit shapes is bounded by the bucket grid,
+    not by the number of distinct prompt lengths."""
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = synthetic_requests(12, vocab_size=cfg.vocab_size,
+                              prompt_len=(3, 40), max_new=(2, 6), seed=6)
+    out, eng = _engine_outputs(params, cfg, reqs, num_slots=4,
+                               block_size=8, max_seq_len=64,
+                               prefill_max_batch=4)
+    n_lens = len({len(r.prompt) for r in reqs})
+    bound = len(eng.runner.prefill_buckets) * len(eng.runner.width_buckets)
+    assert len(eng.runner.prefill_shapes) <= bound
+    assert len(eng.runner.prefill_shapes) < n_lens
+    assert eng.runner.prefill_dispatches < len(reqs)   # batched admission
+    for r in reqs:
+        exp = np.asarray(generate(params, cfg, np.asarray(r.prompt)[None],
+                                  r.max_new_tokens))[0]
+        np.testing.assert_array_equal(out[r.rid], exp)
+
+
+def test_summarize_reports_prefill_and_prefix_stats():
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = shared_prefix_requests(4, vocab_size=cfg.vocab_size,
+                                  prefix_len=16, suffix_len=4,
+                                  max_new=(2, 3), seed=8)
+    eng = ServingEngine(params, cfg, num_slots=2, block_size=8,
+                        max_seq_len=32)
+    stats = summarize(eng.run(reqs), eng.wall_time, eng)
+    pf = stats["prefill"]
+    assert pf["prompt_tokens"] == sum(len(r.prompt) for r in reqs)
+    assert pf["computed_tokens"] + pf["cached_tokens"] \
+        == pf["prompt_tokens"]
+    assert pf["cached_tokens"] > 0
+    assert pf["shapes"] <= pf["buckets"]
+    assert stats["prefix_cache"]["enabled"]
+    assert stats["prefix_cache"]["hit_requests"] > 0
+
+
+# ----------------------------------------------------------------------------
+# serving_bench is importable and runs end to end (CI smoke)
+# ----------------------------------------------------------------------------
+
+def test_serving_bench_smoke(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        import serving_bench
+    finally:
+        sys.path.pop(0)
+    rec = serving_bench.run_bench([
+        "--requests", "3", "--prompt-len", "6", "12", "--max-new", "2", "3",
+        "--slots", "2", "--block-size", "4", "--workload", "mixed",
+        "--out", str(tmp_path)])
+    assert rec["speedup"] > 0
+    assert rec["engine"]["requests"] == 3
+    assert (tmp_path / "bench_smollm-135m_mixed.json").exists()

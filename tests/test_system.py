@@ -74,6 +74,68 @@ def test_hlo_parser_grad_remat_flops():
     assert r["dot_flops"] == 7 * 2 * 64**3 * 4  # fwd + 2 bwd + remat refwd
 
 
+_EW_HLO_FIXTURE = """\
+HloModule ew_fixture
+
+%fused_softmaxish (p0: f32[8,32]) -> f32[8,32] {
+  %p0 = f32[8,32]{1,0} parameter(0)
+  %exp = f32[8,32]{1,0} exponential(f32[8,32]{1,0} %p0)
+  %two = f32[] constant(2)
+  %bt = f32[8,32]{1,0} broadcast(f32[] %two), dimensions={}
+  ROOT %mul = f32[8,32]{1,0} multiply(f32[8,32]{1,0} %exp, f32[8,32]{1,0} %bt)
+}
+
+%add_red (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (x: f32[8,32], y: f32[8,32], i: s32[8,32]) -> f32[8] {
+  %x = f32[8,32]{1,0} parameter(0)
+  %y = f32[8,32]{1,0} parameter(1)
+  %i = s32[8,32]{1,0} parameter(2)
+  %add.1 = f32[8,32]{1,0} add(f32[8,32]{1,0} %x, f32[8,32]{1,0} %y)
+  %tanh.1 = f32[8,32]{1,0} tanh(f32[8,32]{1,0} %add.1)
+  %iadd = s32[8,32]{1,0} add(s32[8,32]{1,0} %i, s32[8,32]{1,0} %i)
+  %conv = f32[8,32]{1,0} convert(s32[8,32]{1,0} %iadd)
+  %fus = f32[8,32]{1,0} fusion(f32[8,32]{1,0} %tanh.1), kind=kLoop, calls=%fused_softmaxish
+  %zero = f32[] constant(0)
+  ROOT %red = f32[8]{0} reduce(f32[8,32]{1,0} %fus, f32[] %zero), dimensions={1}, to_apply=%add_red
+}
+"""
+
+
+def test_hlo_parser_elementwise_flops_fixture():
+    """Elementwise accounting on a hand-written HLO fixture: float
+    add/tanh count 1 FLOP per element, the fusion body's exp+multiply
+    count through the call site, reduce counts its input elements, and
+    integer adds / converts / constants / broadcasts count nothing."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    r = analyze_hlo(_EW_HLO_FIXTURE, entry="main")
+    n = 8 * 32
+    # add + tanh (entry) + exp + multiply (fusion) + reduce input + the
+    # reduce body's scalar add (visited once via to_apply)
+    assert r["elementwise_flops"] == 4 * n + n + 1
+    assert r["dot_flops"] == 0
+
+
+def test_hlo_parser_elementwise_real_program():
+    """Elementwise FLOPs on a real compiled program: softmax over
+    (64, 512) must count at least exp + divide + reduce passes, and the
+    dot-only accounting is unchanged by the new pass."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def f(x, w):
+        return jax.nn.softmax(x @ w, axis=-1)
+
+    comp = jax.jit(f).lower(jnp.zeros((64, 128)),
+                            jnp.zeros((128, 512))).compile()
+    r = analyze_hlo(comp.as_text())
+    assert r["dot_flops"] == 2 * 64 * 128 * 512
+    assert r["elementwise_flops"] >= 3 * 64 * 512  # exp, div, max/sum
+
+
 def test_sanitize_spec():
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import sanitize_spec
