@@ -17,11 +17,21 @@ Workloads (--workload):
   shared-prefix  common system prompt + short per-request suffix — runs
                  the engine with the prefix cache ON and OFF and records
                  computed vs cached prefill tokens for both
+  repetitive     short token pattern tiled through each prompt — the
+                 n-gram speculation scenario
+
+With --speculate K a second engine arm runs with n-gram speculative
+decoding; the record adds acceptance rate and tokens-per-dispatch, and
+EVERY spec-arm output is checked token-identical to generate() at
+temperature 0 (the correctness gate — speculation must never change
+greedy output).
 
     PYTHONPATH=src python benchmarks/serving_bench.py --arch smollm-135m \
-        --workload shared-prefix --requests 24 --prefix-len 192 --slots 8
+        --workload repetitive --requests 24 --speculate 4 --draft ngram
 
-Writes the trajectory record to
+--smoke shrinks everything for the CI gate (fixed seed) and asserts
+acceptance rate > 0, greedy bit-identity, and the verify-compilation
+bound. Writes the trajectory record to
 experiments/serving/bench_<arch>_<workload>.json. Importable:
 `run_bench([...])` returns the record (used by the CI smoke test).
 """
@@ -39,8 +49,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
-from repro.serving.engine import (ServingEngine, shared_prefix_requests,
-                                  summarize, synthetic_requests)
+from repro.serving.bucketing import pick_bucket
+from repro.serving.engine import (ServingEngine, repetitive_requests,
+                                  shared_prefix_requests, summarize,
+                                  synthetic_requests)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "serving")
@@ -70,7 +82,7 @@ def run_engine(engine, requests):
     done = engine.run(requests)
     useful = sum(len(c.tokens) for c in done)
     return useful, engine.wall_time, summarize(done, engine.wall_time,
-                                               engine)
+                                               engine), done
 
 
 def _make_requests(args, cfg):
@@ -82,6 +94,10 @@ def _make_requests(args, cfg):
             n_prefixes=args.n_prefixes, seed=args.seed)
     plen = (args.prompt_len[0] if len(args.prompt_len) == 1
             else tuple(args.prompt_len))
+    if args.workload == "repetitive":
+        return repetitive_requests(
+            args.requests, vocab_size=cfg.vocab_size, period=args.period,
+            prompt_len=plen, max_new=tuple(args.max_new), seed=args.seed)
     if args.workload == "mixed" and len(args.prompt_len) == 1:
         plen = (max(args.prompt_len[0] // 4, 1), args.prompt_len[0])
     return synthetic_requests(args.requests, vocab_size=cfg.vocab_size,
@@ -89,21 +105,38 @@ def _make_requests(args, cfg):
                               seed=args.seed)
 
 
-def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache):
+def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache,
+                    speculate: int = 0):
     engine = ServingEngine(params, cfg, num_slots=args.slots,
                            block_size=args.block_size, max_seq_len=max_seq,
                            prefix_cache=prefix_cache,
-                           prefill_max_batch=args.prefill_batch)
+                           prefill_max_batch=args.prefill_batch,
+                           speculate=speculate, draft=args.draft,
+                           ngram=args.ngram)
     engine.run(reqs)                  # warm up jit on the workload shapes
     engine.reset_prefix_cache()       # measured pass starts cache-cold
-    return run_engine(engine, reqs)
+    return run_engine(engine, reqs), engine
+
+
+def _check_identity(params, cfg, reqs, done) -> bool:
+    """The speculative-decode correctness gate: every engine output must
+    be token-identical to a plain greedy generate() of its request."""
+    by_rid = {c.rid: c.tokens for c in done}
+    for r in reqs:
+        exp = np.asarray(generate(params, cfg,
+                                  np.asarray(r.prompt)[None],
+                                  r.max_new_tokens))[0]
+        if not np.array_equal(by_rid[r.rid], exp):
+            return False
+    return True
 
 
 def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--workload", default="uniform",
-                    choices=["uniform", "mixed", "shared-prefix"])
+                    choices=["uniform", "mixed", "shared-prefix",
+                             "repetitive"])
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, nargs="+", default=[256])
     ap.add_argument("--prefix-len", type=int, default=192,
@@ -111,13 +144,34 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap.add_argument("--suffix-len", type=int, nargs=2, default=(8, 64),
                     help="per-request suffix range (shared-prefix)")
     ap.add_argument("--n-prefixes", type=int, default=1)
+    ap.add_argument("--period", type=int, default=6,
+                    help="repeated-pattern length (repetitive)")
     ap.add_argument("--max-new", type=int, nargs=2, default=(4, 32))
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-batch", type=int, default=4)
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="n-gram speculative-decoding arm with K drafts")
+    ap.add_argument("--draft", default="ngram", choices=["ngram"])
+    ap.add_argument("--ngram", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed CI gate: shrink the workload "
+                         "and assert acceptance > 0 + greedy identity")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        # the acceptance-rate gate is only meaningful where n-gram
+        # lookup can hit — pin the workload the gate is defined on
+        args.workload = "repetitive"
+        args.requests = min(args.requests, 6)
+        args.prompt_len = [24]
+        args.max_new = (8, 16)
+        args.slots = min(args.slots, 3)
+        args.block_size = min(args.block_size, 4)
+        if args.speculate == 0:
+            args.speculate = 4
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -128,8 +182,8 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     run_baseline(params, cfg, reqs, args.slots)
     base_tok, base_s = run_baseline(params, cfg, reqs, args.slots)
 
-    eng_tok, eng_s, eng_stats = _measure_engine(params, cfg, args, reqs,
-                                                max_seq, prefix_cache=None)
+    (eng_tok, eng_s, eng_stats, _), _ = _measure_engine(
+        params, cfg, args, reqs, max_seq, prefix_cache=None)
 
     base_tps = base_tok / base_s
     eng_tps = eng_tok / eng_s
@@ -147,12 +201,44 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         "speedup": round(eng_tps / base_tps, 2),
     }
     if args.workload == "shared-prefix":
-        _, _, nocache = _measure_engine(params, cfg, args, reqs, max_seq,
-                                        prefix_cache=False)
+        (_, _, nocache, _), _ = _measure_engine(
+            params, cfg, args, reqs, max_seq, prefix_cache=False)
         record["engine_no_prefix_cache"] = nocache
         record["prefill_tokens_saved"] = (
             nocache["prefill"]["computed_tokens"]
             - eng_stats["prefill"]["computed_tokens"])
+    if args.speculate > 0:
+        (sp_tok, sp_s, sp_stats, sp_done), sp_engine = _measure_engine(
+            params, cfg, args, reqs, max_seq, prefix_cache=None,
+            speculate=args.speculate)
+        sp_tps = sp_tok / sp_s
+        sp = sp_stats["speculation"]
+        # the correctness gate: speculation must never change greedy
+        # output, and verify compiles stay within the bucket grid
+        identical = _check_identity(params, cfg, reqs, sp_done)
+        shapes_ok = (len(sp_engine.runner.verify_shapes)
+                     <= len(sp_engine.runner.verify_buckets))
+        bucket_ok = all(
+            t == pick_bucket(t, sp_engine.runner.verify_buckets)
+            for t in sp_engine.runner.verify_shapes)
+        record["engine_speculative"] = sp_stats
+        record["speculation_gate"] = {
+            "greedy_identical": identical,
+            "verify_shapes_bounded": shapes_ok and bucket_ok,
+        }
+        record["spec_speedup"] = round(sp_tps / eng_tps, 2)
+        print(f"spec_engine_tok_s,{sp_tps:.1f},")
+        print(f"spec_acceptance_rate,{sp['acceptance_rate']},"
+              f"{sp['accepted_tokens']} of {sp['proposed_tokens']} drafts")
+        print(f"spec_tokens_per_dispatch,{sp['tokens_per_dispatch']},"
+              f"vs {eng_stats.get('decode_steps', 0)} plain decode steps")
+        print(f"spec_speedup,{record['spec_speedup']},"
+              f"x over non-speculative engine")
+        print(f"spec_greedy_identical,{identical},")
+        if args.smoke:
+            assert identical, "speculation changed greedy output"
+            assert sp["acceptance_rate"] > 0, "no draft token accepted"
+            assert shapes_ok and bucket_ok, "verify shapes escaped grid"
     print(f"serving_baseline_tok_s,{base_tps:.1f},")
     print(f"serving_engine_tok_s,{eng_tps:.1f},")
     print(f"serving_speedup,{record['speedup']:.2f},x over token-by-token")

@@ -3,7 +3,10 @@
 #   scripts/ci.sh              # fast gate (default): -m 'not slow'
 #   scripts/ci.sh fast         # same, explicitly
 #   scripts/ci.sh full         # everything, including slow e2e tests
-#   scripts/ci.sh serving      # serving subsystem only (-m serving)
+#   scripts/ci.sh serving      # serving tests (-m serving) + the
+#                              # spec-decode smoke bench (fixed seed;
+#                              # asserts acceptance > 0 and greedy
+#                              # bit-identity vs generate())
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,6 +14,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "${1:-fast}" in
   fast)    shift || true; exec python -m pytest -x -q -m 'not slow' "$@" ;;
   full)    shift;         exec python -m pytest -x -q "$@" ;;
-  serving) shift;         exec python -m pytest -x -q -m serving "$@" ;;
+  serving) shift
+           python -m pytest -x -q -m serving "$@"
+           exec python benchmarks/serving_bench.py --workload repetitive \
+                --smoke --seed 0 --out "$(mktemp -d)" ;;
   *)                      exec python -m pytest -x -q "$@" ;;
 esac

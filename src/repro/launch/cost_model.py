@@ -4,7 +4,10 @@ The dry-run compiles on the CPU backend whose fusion decisions do not mirror
 TPU, so HBM bytes cannot be read off the compiled module; instead we model
 them from first principles (MaxText-style) and record the formulas here.
 FLOPs and collective bytes COME FROM THE COMPILED HLO (hlo_analysis.py) —
-only the HBM term is analytic.
+only the HBM term is analytic. The roofline compute term charges the
+HLO's dot FLOPs to the MXU and its elementwise FLOPs to the VPU (1/64 of
+MXU peak — see hlo_analysis.VPU_FLOPS), so softmax/norm-heavy decode
+steps are no longer bounded by their matmul time alone.
 
 Traffic components per chip per step (bytes, bf16 activations):
 

@@ -222,7 +222,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
                                    flash=(variant == "opt"))
         mf = model_flops(cfg, shape)
         roof = hlo_analysis.roofline(flops_per_chip, hbm["total"], coll,
-                                     n_chips, mf)
+                                     n_chips, mf,
+                                     ew_flops=analysis["elementwise_flops"])
         rec.update(
             status="ok",
             lower_s=round(t_lower, 1),

@@ -24,6 +24,12 @@ Roofline factors (ring algorithms):
 
 Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s
 per ICI link with 2 usable links per collective ring => 100 GB/s effective.
+Elementwise FLOPs run on the VPU, not the MXU: 8x128 vector lanes with an
+FMA per cycle (2048 FLOP/cycle) against 4 128x128 MXUs (131072
+FLOP/cycle at the same clock), so the VPU peak is modeled as 1/64 of the
+MXU peak. The roofline compute term is dot/MXU + elementwise/VPU —
+softmax/norm-heavy decode steps are VPU-bound and a dot-only bound
+undercounts them (launch/cost_model.py models the HBM term).
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ import re
 from collections import defaultdict
 
 PEAK_FLOPS = 197e12
+VPU_FLOPS = PEAK_FLOPS / 64       # elementwise (vector-unit) peak
 HBM_BW = 819e9
 ICI_BW = 100e9
 
@@ -313,6 +320,7 @@ class Roofline:
     memory_s: float
     collective_s: float
     flops: float                # per-chip, trip-weighted HLO dot flops
+    ew_flops: float             # per-chip elementwise (VPU) flops
     hbm_bytes: float            # per-chip analytic HBM traffic
     collective_bytes: int
     model_flops: float          # global useful flops (6ND / 2ND)
@@ -325,8 +333,13 @@ class Roofline:
 
 
 def roofline(flops_per_chip: float, hbm_bytes: float, coll_stats: dict,
-             n_chips: int, model_flops: float) -> Roofline:
-    compute_s = flops_per_chip / PEAK_FLOPS
+             n_chips: int, model_flops: float,
+             ew_flops: float = 0.0) -> Roofline:
+    """3-term roofline. The compute term charges dot FLOPs to the MXU
+    and elementwise FLOPs to the VPU (serially — they share the issue
+    pipeline), so softmax/norm-heavy programs are no longer bounded by
+    their (small) matmul time alone."""
+    compute_s = flops_per_chip / PEAK_FLOPS + ew_flops / VPU_FLOPS
     memory_s = hbm_bytes / HBM_BW
     coll_s = collective_time(coll_stats)
     coll_bytes = int(sum(s["bytes"] for s in coll_stats.values()))
@@ -335,7 +348,7 @@ def roofline(flops_per_chip: float, hbm_bytes: float, coll_stats: dict,
     step_time = max(max(terms.values()), 1e-30)
     return Roofline(
         compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
-        flops=flops_per_chip, hbm_bytes=hbm_bytes,
+        flops=flops_per_chip, ew_flops=ew_flops, hbm_bytes=hbm_bytes,
         collective_bytes=coll_bytes, model_flops=model_flops,
         bottleneck=bottleneck,
         mfu_bound=model_flops / (step_time * n_chips * PEAK_FLOPS),

@@ -10,6 +10,11 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --workload shared-prefix \
         --prefix-len 48 --prefix-cache --prefill-buckets 16 32 64
 
+    # n-gram speculative decoding (greedy-only; output stays
+    # bit-identical to generate()) on a repetitive-text workload:
+    PYTHONPATH=src python -m repro.launch.serve --workload repetitive \
+        --speculate 4 --draft ngram --max-new 16 32
+
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
     PYTHONPATH=src python -m repro.launch.serve --mode naive --batch 4
@@ -33,6 +38,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serving.engine import (Request, ServingEngine,
+                                  repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
 
@@ -92,6 +98,11 @@ def _run_engine(args, cfg, params):
             prefix_len=args.prefix_len, suffix_len=plen,
             max_new=tuple(args.max_new), n_prefixes=args.n_prefixes,
             rate=rate, seed=args.seed)
+    elif args.workload == "repetitive":
+        reqs = repetitive_requests(
+            args.requests, vocab_size=cfg.vocab_size, period=args.period,
+            prompt_len=plen, max_new=tuple(args.max_new), rate=rate,
+            seed=args.seed)
     else:
         reqs = synthetic_requests(
             args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
@@ -103,7 +114,8 @@ def _run_engine(args, cfg, params):
         temperature=args.temperature, seed=args.seed,
         prefix_cache=args.prefix_cache,
         prefill_buckets=args.prefill_buckets,
-        prefill_max_batch=args.prefill_batch)
+        prefill_max_batch=args.prefill_batch,
+        speculate=args.speculate, draft=args.draft, ngram=args.ngram)
     done = engine.run(reqs)
     stats = summarize(done, engine.wall_time, engine)
     print(json.dumps(stats, indent=1))
@@ -147,11 +159,20 @@ def main():
     ap.add_argument("--max-new", type=int, nargs=2, default=(8, 32),
                     metavar=("LO", "HI"))
     ap.add_argument("--workload", default="synthetic",
-                    choices=["synthetic", "shared-prefix"])
+                    choices=["synthetic", "shared-prefix", "repetitive"])
     ap.add_argument("--prefix-len", type=int, default=48,
                     help="shared system-prompt length (shared-prefix)")
     ap.add_argument("--n-prefixes", type=int, default=1,
                     help="distinct system prompts (shared-prefix)")
+    ap.add_argument("--period", type=int, default=6,
+                    help="repeated-pattern length (repetitive)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="max draft tokens per verify dispatch "
+                         "(speculative decoding; 0 = off, greedy-only)")
+    ap.add_argument("--draft", default="ngram", choices=["ngram"],
+                    help="draft proposer (ngram = prompt lookup)")
+    ap.add_argument("--ngram", type=int, default=3,
+                    help="longest n-gram the proposer matches")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="share cached prompt-prefix blocks (default: auto "

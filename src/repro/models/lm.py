@@ -21,6 +21,12 @@ Entry points:
                 block_tables, slots)
       -> last_logits, new state   (bucketed batched prefill straight into
          paged state, skipping prefix-cached tokens; see serving/runner)
+  decode_verify_paged(params, cfg, state, tokens, positions, counts,
+                      block_tables)
+      -> per-position logits, new state, recurrent snapshots
+         (batched K-token verify forward for speculative decoding;
+         commit_decode_state(cfg, state, snapshots, idx) accepts/rolls
+         back recurrent slot state at each lane's accepted length)
 """
 from __future__ import annotations
 
@@ -588,6 +594,145 @@ def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
     idx = jnp.clip(lengths - 1 - starts, 0, Ls - 1)
     last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
     return last, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def _apply_block_verify_paged(params, kind: str, x, positions,
+                              cfg: ModelConfig, state, block_tables,
+                              starts, counts):
+    """Batched K-token verify step against paged state. x: (B, T, D);
+    row b holds `counts[b]` draft-chain tokens starting at absolute
+    position starts[b], right-padded to the bucket length T.
+
+    Attention layers reuse the suffix-prefill path (attend to the
+    committed history through the block table + causally within the
+    chain; scatter the chain's K/V — rollback is free because stale
+    writes past the accepted point are position-masked and overwritten
+    when those positions are re-fed). Recurrent layers resume from the
+    live per-slot state, freeze past counts, and return PER-STEP state
+    snapshots instead of committing: the slot state is committed later
+    by commit_decode_state at each lane's accepted length. Returns
+    (x, new_state, snapshots-or-None)."""
+    if kind in ("attn", "attn_local", "moe"):
+        x, new_state = _apply_block_prefill_paged(
+            params, kind, x, positions, cfg, state, block_tables,
+            starts, starts + counts, starts, None)
+        return x, new_state, None
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == "rwkv":
+        o, _, snap_t = recurrent.rwkv_seq(params["tmix"], h, cfg,
+                                          state["tmix"], lengths=counts,
+                                          return_states=True)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        o2, _, snap_c = recurrent.rwkv_channel_mix(
+            params["cmix"], h2, state["cmix"], lengths=counts,
+            return_states=True)
+        x = x + o2
+        return x, state, {"tmix": snap_t, "cmix": snap_c}
+    if kind == "rec":
+        o, _, snap = recurrent.rglru_block_seq(params["rec"], h, cfg,
+                                               state["rec"],
+                                               lengths=counts,
+                                               return_states=True)
+        x = x + o
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
+        return x, state, {"rec": snap}
+    raise ValueError(kind)
+
+
+def decode_verify_paged(params, cfg: ModelConfig, state, tokens, positions,
+                        counts, block_tables):
+    """Batched K-token verify forward through the paged cache — the
+    verify half of the propose/verify speculative-decode pipeline.
+
+    tokens: (B, T) int32 — row b is the draft chain [pending token,
+    draft_1, ..., draft_{k}] right-padded to the bucket length T;
+    positions: (B,) int32 absolute position of each row's first token;
+    counts: (B,) int32 true chain lengths (0 = inactive lane: nothing
+    is computed or written for it); block_tables: (B, max_blocks).
+
+    Returns (logits (B, T, V) — logits[b, i] are the next-token logits
+    after consuming chain token i, exactly what decode_step_paged would
+    have produced feeding the chain one token at a time —, new_state,
+    snapshots). Attention K/V of all `counts` chain positions is
+    scattered eagerly (stale entries from a later-rejected suffix are
+    position-masked until overwritten — attention rollback is just not
+    advancing the position). Recurrent slot state is NOT advanced:
+    `snapshots` mirrors the recurrent layers of the state tree with
+    per-step (T+1, B, ...) stacks (leading n_super axis for scanned
+    blocks); commit_decode_state gathers index a+1 per lane to accept
+    a draft prefix of length a, or 0 to roll back entirely.
+    """
+    params = cast_params(params, cfg)
+    B, T = tokens.shape
+    pos_grid = positions[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+
+    new_prefix, prefix_snaps = [], []
+    for p, kind, st in zip(params["prefix"], cfg.prefix_pattern,
+                           state["prefix"]):
+        h, st_new, snap = _apply_block_verify_paged(
+            p, kind, h, pos_grid, cfg, st, block_tables, positions, counts)
+        new_prefix.append(st_new)
+        prefix_snaps.append(snap)
+
+    def superblock(h, xs):
+        block_params, block_state = xs
+        block_params = _pin_block(block_params)
+        h = _pin_act(h)
+        new_state, snaps = {}, {}
+        for pi, kind in enumerate(cfg.block_pattern):
+            h, st, snap = _apply_block_verify_paged(
+                block_params[f"p{pi}"], kind, h, pos_grid, cfg,
+                block_state[f"p{pi}"], block_tables, positions, counts)
+            new_state[f"p{pi}"] = st
+            snaps[f"p{pi}"] = snap
+        return h, (new_state, snaps)
+
+    h, (new_blocks, block_snaps) = lax.scan(
+        superblock, h, (params["blocks"], state["blocks"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, cfg, h)                          # (B, T, V)
+    return (logits, {"prefix": new_prefix, "blocks": new_blocks},
+            {"prefix": prefix_snaps, "blocks": block_snaps})
+
+
+def commit_decode_state(cfg: ModelConfig, state, snapshots, idx):
+    """Commit per-slot recurrent state after a verify step.
+
+    snapshots: the per-step state stacks from decode_verify_paged;
+    idx: (B,) int32 — tokens of lane b's chain to accept (a+1 for an
+    accepted draft prefix of length a, 0 to keep the pre-verify state,
+    e.g. for lanes that sat out the dispatch). Attention state needs no
+    commit (positions are the rollback); recurrent leaves are gathered
+    at their lane's accepted snapshot. Returns the committed state."""
+    B = idx.shape[0]
+    lanes = jnp.arange(B)
+
+    def gather(snap_leaf, stacked):
+        if stacked:                     # (n_super, T+1, B, ...)
+            return snap_leaf[:, idx, lanes]
+        return snap_leaf[idx, lanes]    # (T+1, B, ...)
+
+    new_prefix = []
+    for kind, st, snap in zip(cfg.prefix_pattern, state["prefix"],
+                              snapshots["prefix"]):
+        if snap is None:
+            new_prefix.append(st)
+        else:
+            new_prefix.append(jax.tree.map(
+                lambda s: gather(s, False), snap))
+    new_blocks = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        key = f"p{pi}"
+        snap = snapshots["blocks"].get(key)
+        if snap is None:
+            new_blocks[key] = state["blocks"][key]
+        else:
+            new_blocks[key] = jax.tree.map(
+                lambda s: gather(s, True), snap)
+    return {"prefix": new_prefix, "blocks": new_blocks}
 
 
 def decode_step_paged(params, cfg: ModelConfig, state, tokens, positions,

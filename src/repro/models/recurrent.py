@@ -75,8 +75,10 @@ def _rwkv_group_norm(y, scale, n_heads, head_dim, eps=1e-5):
     return (yf.reshape(B, S, -1) * scale.astype(jnp.float32)).astype(y.dtype)
 
 
-def rwkv_seq(params, x, cfg, state=None, lengths=None):
-    """Sequence form. x: (B, S, D). Returns (y, new_state).
+def rwkv_seq(params, x, cfg, state=None, lengths=None,
+             return_states=False):
+    """Sequence form. x: (B, S, D). Returns (y, new_state) — or
+    (y, new_state, snapshots) with return_states=True.
 
     state = {"shift": (B, D) last token, "S": (B, H, hd, hd) wkv state}.
 
@@ -86,6 +88,13 @@ def rwkv_seq(params, x, cfg, state=None, lengths=None):
     state is gathered at each row's true last token, so final states
     match an unpadded per-row run exactly. Outputs at valid positions
     are unaffected either way (padding is strictly trailing).
+
+    return_states=True additionally returns per-step state snapshots
+    {"shift": (S+1, B, D), "S": (S+1, B, H, hd, hd)} where index t is
+    the state after consuming t tokens (index 0 = the input state) —
+    the rollback hook for speculative decoding: a rejected draft
+    restores the snapshot at its accepted length. Snapshot entries past
+    a row's `lengths` are junk and must not be gathered.
     """
     B, S, D = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
@@ -108,16 +117,28 @@ def rwkv_seq(params, x, cfg, state=None, lengths=None):
         kv = kt[..., :, None] * vt[..., None, :]         # (B,H,hd,hd)
         yt = jnp.einsum("bhk,bhkv->bhv", rt, Sst + u[..., None] * kv)
         S_new = wt[..., :, None] * Sst + kv
-        return S_new, yt
+        return S_new, ((yt, S_new) if return_states else yt)
 
     xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3).astype(jnp.float32))
     S_fin, ys = lax.scan(step, state["S"], xs)
+    snaps = None
+    if return_states:
+        ys, S_steps = ys
+        snaps = {
+            "S": jnp.concatenate([state["S"][None], S_steps], axis=0),
+            # state after t tokens shifts on token t-1 (t=0: input state)
+            "shift": jnp.concatenate(
+                [state["shift"][None], jnp.swapaxes(x, 0, 1)], axis=0),
+        }
     y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * hd).astype(x.dtype)
     y = _rwkv_group_norm(y, params["ln_scale"], H, hd) * g
     out = y @ params["w_o"]
     shift = x[:, -1] if lengths is None else _last_valid(x, lengths)
-    return out, {"shift": shift, "S": S_fin}
+    new_state = {"shift": shift, "S": S_fin}
+    if return_states:
+        return out, new_state, snaps
+    return out, new_state
 
 
 def _last_valid(x, lengths):
@@ -142,9 +163,12 @@ def init_rwkv_channel_mix(key, d_model, d_ff, dtype):
             "mix": (jax.random.uniform(k4, (2, d_model)) * 0.5).astype(dtype)}
 
 
-def rwkv_channel_mix(params, x, shift_state=None, lengths=None):
+def rwkv_channel_mix(params, x, shift_state=None, lengths=None,
+                     return_states=False):
     """RWKV channel mix (relu^2). Returns (y, last_token); with
-    `lengths` the shift state is each row's true last token."""
+    `lengths` the shift state is each row's true last token.
+    return_states=True also returns (S+1, B, D) per-step shift
+    snapshots (index t = state after t tokens; see rwkv_seq)."""
     B, S, D = x.shape
     if shift_state is None:
         shift_state = jnp.zeros((B, D), x.dtype)
@@ -155,6 +179,10 @@ def rwkv_channel_mix(params, x, shift_state=None, lengths=None):
     k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
     y = jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
     shift = x[:, -1] if lengths is None else _last_valid(x, lengths)
+    if return_states:
+        snaps = jnp.concatenate([shift_state[None],
+                                 jnp.swapaxes(x, 0, 1)], axis=0)
+        return y, shift, snaps
     return y, shift
 
 
@@ -194,10 +222,13 @@ def _rglru_gates(params, x):
     return a, gated_x
 
 
-def _causal_conv1d(x, w, b, state=None, lengths=None):
+def _causal_conv1d(x, w, b, state=None, lengths=None,
+                   return_history=False):
     """x: (B, S, C); w: (W, C) depthwise. state: (B, W-1, C) history.
     With `lengths`, the returned history window ends at each row's true
-    last input instead of the padded end."""
+    last input instead of the padded end. return_history=True also
+    returns the padded input stream xp = [state | x] so callers can
+    slice per-step history windows (speculative-decode snapshots)."""
     W = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
@@ -210,26 +241,34 @@ def _causal_conv1d(x, w, b, state=None, lengths=None):
         # positions len-W+1 .. len-1, reaching into the prior state)
         idx = lengths[:, None] + jnp.arange(W - 1)[None, :]
         new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    if return_history:
+        return out + b, new_state, xp
     return out + b, new_state
 
 
-def rglru_block_seq(params, x, cfg, state=None, lengths=None):
+def rglru_block_seq(params, x, cfg, state=None, lengths=None,
+                    return_states=False):
     """Griffin recurrent block, sequence form. x: (B, S, D).
 
     lengths: optional (B,) true lengths for right-padded batched
     prefill — padded steps freeze the recurrence (a=1, gated input 0)
-    so final states match an unpadded per-row run."""
+    so final states match an unpadded per-row run.
+
+    return_states=True also returns per-step snapshots
+    {"h": (S+1, B, rd), "conv": (S+1, B, W-1, rd)} (index t = state
+    after consuming t tokens; index 0 = the input state) for
+    speculative-decode rollback. Entries past `lengths` are junk."""
     B, S, D = x.shape
     rd = params["w_in_rec"].shape[1]
+    W = params["conv_w"].shape[0]
     if state is None:
         state = {"h": jnp.zeros((B, rd), jnp.float32),
-                 "conv": jnp.zeros((B, params["conv_w"].shape[0] - 1, rd),
-                                   x.dtype)}
+                 "conv": jnp.zeros((B, W - 1, rd), x.dtype)}
     branch = x @ params["w_in_rec"]
     gate = jax.nn.gelu(x @ params["w_in_gate"])
-    branch, conv_state = _causal_conv1d(branch, params["conv_w"],
-                                        params["conv_b"], state["conv"],
-                                        lengths=lengths)
+    branch, conv_state, conv_xp = _causal_conv1d(
+        branch, params["conv_w"], params["conv_b"], state["conv"],
+        lengths=lengths, return_history=True)
     a, gx = _rglru_gates(params, branch)
     if lengths is not None:
         valid = (jnp.arange(S)[None, :] < lengths[:, None])[..., None]
@@ -244,4 +283,15 @@ def rglru_block_seq(params, x, cfg, state=None, lengths=None):
     h_fin, hs = lax.scan(step, state["h"],
                          (a.transpose(1, 0, 2), gx.transpose(1, 0, 2)))
     y = hs.transpose(1, 0, 2).astype(x.dtype) * gate
-    return y @ params["w_out"], {"h": h_fin, "conv": conv_state}
+    out = y @ params["w_out"]
+    new_state = {"h": h_fin, "conv": conv_state}
+    if return_states:
+        snaps = {
+            "h": jnp.concatenate([state["h"][None], hs], axis=0),
+            # conv history after t tokens = inputs t-W+1..t-1, i.e.
+            # xp[:, t : t+W-1] over the [state | x] stream
+            "conv": jnp.stack([conv_xp[:, t:t + W - 1]
+                               for t in range(S + 1)], axis=0),
+        }
+        return out, new_state, snaps
+    return out, new_state

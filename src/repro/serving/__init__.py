@@ -3,21 +3,31 @@
 `engine.ServingEngine` is a thin facade over:
 
   `scheduler.Scheduler`        queue, bucketed admission, lifecycle,
-                               eviction, copy-on-write orchestration
+                               eviction, copy-on-write orchestration,
+                               draft propose / accept / rollback
   `block_manager.BlockAllocator`
                                refcounted physical KV blocks + content-
                                hash prefix index (shared prompt blocks)
   `runner.ModelRunner`         jitted bucketed batched prefill / paged
-                               decode dispatch, device block tables
+                               decode / multi-token verify dispatch,
+                               device block tables
 
 Requests enter a queue; the scheduler admits same-bucket groups in one
 padded prefill dispatch; finished sequences are evicted and replaced
 mid-flight so the decode batch stays full under sustained load. Cache
 memory scales with live tokens (blocks), not batch x max_len, and
-identical prompt prefixes share physical blocks by refcount.
+identical prompt prefixes share physical blocks by refcount. With
+`speculate=K`, per-slot n-gram proposers (`draft.py`) draft up to K
+tokens that one bucketed verify dispatch checks; the longest agreeing
+prefix plus one bonus token is accepted and rejected drafts roll back
+(positions for attention, snapshots for recurrent state, block claims
+for the allocator) — greedy output is bit-identical to `generate()`.
 """
 from repro.serving.block_manager import BlockAllocator, PrefixMatch
+from repro.serving.bucketing import next_pow2, pick_bucket, pow2_buckets
+from repro.serving.draft import NGramProposer, make_proposer
 from repro.serving.engine import (Completion, Request, ServingEngine,
+                                  repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
 from repro.serving.kv_cache import init_paged_state
@@ -25,5 +35,7 @@ from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import Scheduler
 
 __all__ = ["ServingEngine", "Request", "Completion", "synthetic_requests",
-           "shared_prefix_requests", "summarize", "BlockAllocator",
-           "PrefixMatch", "ModelRunner", "Scheduler", "init_paged_state"]
+           "shared_prefix_requests", "repetitive_requests", "summarize",
+           "BlockAllocator", "PrefixMatch", "ModelRunner", "Scheduler",
+           "init_paged_state", "NGramProposer", "make_proposer",
+           "next_pow2", "pick_bucket", "pow2_buckets"]

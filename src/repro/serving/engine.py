@@ -5,20 +5,26 @@ synchronization only at coarse boundaries — applied to inference. The
 engine composes:
 
   scheduler.Scheduler      queue, admission policy, request lifecycle,
-                           eviction, copy-on-write orchestration
+                           eviction, copy-on-write orchestration, draft
+                           proposers + speculative accept/rollback
   block_manager.BlockAllocator
                            refcounted physical blocks + content-hash
                            prefix index (shared prompt blocks, COW)
-  runner.ModelRunner       jitted bucketed batched prefill / decode
-                           dispatch, device block tables, sampling
+  runner.ModelRunner       jitted bucketed batched prefill / decode /
+                           multi-token verify dispatch, device block
+                           tables, sampling
 
 Request lifecycle:
-  queued -> admitted (blocks reserved; cached prefix blocks shared by
-  refcount; the prompt suffix prefilled in ONE batched jit dispatch
-  together with other same-bucket prompts; first token sampled from the
-  prefill logits) -> decoding (one lane of the batched decode_step_paged
-  per iteration) -> finished (max_new_tokens or eos) -> evicted (block
-  refs dropped — shared prompt blocks stay warm for future hits).
+  queued -> admitted (prompt blocks bound, generation blocks reserved
+  as a budget; cached prefix blocks shared by refcount; the prompt
+  suffix prefilled in ONE batched jit dispatch together with other
+  same-bucket prompts; first token sampled from the prefill logits)
+  -> decoding (one lane of the batched decode_step_paged per
+  iteration — or, with speculate=K, of a batched K-token verify whose
+  accepted prefix advances several tokens per dispatch and whose
+  rejected suffix rolls back positions, recurrent state, and block
+  claims) -> finished (max_new_tokens or eos) -> evicted (block refs
+  dropped — shared prompt blocks stay warm for future hits).
 
 Prefix caching shares immutable prompt blocks across sequences and is
 available for pure-attention block patterns; recurrent mixers (rwkv /
@@ -53,6 +59,12 @@ class ServingEngine:
     prefill_buckets    suffix-length buckets for batched prefill
                        (default: powers of two up to max_seq_len)
     prefill_max_batch  max prompts per prefill dispatch
+    speculate          max draft tokens per verify dispatch (0 = off);
+                       greedy-only (temperature must be 0): the accept
+                       rule compares the model's argmax to the draft,
+                       so speculation never changes greedy output
+    draft              draft proposer kind ('ngram': prompt lookup)
+    ngram              longest n-gram the proposer tries to match
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
@@ -60,10 +72,16 @@ class ServingEngine:
                  num_blocks: Optional[int] = None, temperature: float = 0.0,
                  seed: int = 0, prefix_cache: Optional[bool] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 prefill_max_batch: int = 4):
+                 prefill_max_batch: int = 4, speculate: int = 0,
+                 draft: str = "ngram", ngram: int = 3):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "serving engine currently supports text LMs only")
+        if speculate and temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only (the accept rule "
+                "compares the model's argmax to the draft); use "
+                "temperature=0 or speculate=0")
         attn_only = all(k in ATTN_KINDS
                         for k in cfg.block_pattern + cfg.prefix_pattern)
         if prefix_cache and not attn_only:
@@ -80,6 +98,8 @@ class ServingEngine:
         if num_blocks is None:
             num_blocks = 1 + num_slots * self.max_blocks_per_seq
 
+        self.speculate = max(0, speculate)
+        self.draft = draft
         self.allocator = BlockAllocator(num_blocks, block_size=block_size)
         self.runner = ModelRunner(
             params, cfg, num_slots=num_slots, block_size=block_size,
@@ -87,16 +107,17 @@ class ServingEngine:
             max_blocks_per_seq=self.max_blocks_per_seq,
             temperature=temperature, seed=seed,
             prefill_buckets=prefill_buckets,
-            prefill_max_batch=prefill_max_batch)
+            prefill_max_batch=prefill_max_batch, speculate=self.speculate)
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
         self.scheduler = Scheduler(
             self.allocator, self.runner, num_slots=num_slots,
             block_size=block_size,
             max_blocks_per_seq=self.max_blocks_per_seq,
             max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
-            now_fn=self._now)
+            now_fn=self._now, speculate=self.speculate, draft=draft,
+            ngram=ngram)
         self.cache_bytes = self.runner.cache_bytes
-        self.steps = 0                # decode iterations executed
+        self.steps = 0                # decode+verify iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
 
     # ------------------------------------------------------------------
@@ -120,8 +141,22 @@ class ServingEngine:
         self.allocator.reset_prefix_cache()
 
     def step(self) -> None:
-        """One engine iteration: admit, then one batched decode step."""
+        """One engine iteration: admit, then one batched decode or
+        verify step. With speculation on, lanes whose proposers drafted
+        anything go through one multi-token verify dispatch (propose ->
+        verify -> accept/rollback); when nothing was proposed the
+        iteration falls back to the plain decode dispatch, so idle
+        proposers cost nothing."""
         self.scheduler.admit()
+        if self.speculate:
+            vb = self.scheduler.prepare_verify()
+            if vb is not None:
+                tokens, positions, counts, active, drafts = vb
+                out_tok = self.runner.verify(tokens, positions, counts)
+                self.steps += 1
+                self.busy_lane_steps += len(active)
+                self.scheduler.consume_verify(active, drafts, out_tok)
+                return
         batch = self.scheduler.prepare_decode()
         if batch is None:
             return
@@ -220,6 +255,31 @@ def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int = 48,
     return out
 
 
+def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
+                        prompt_len: Union[int, Tuple[int, int]] = 48,
+                        max_new: tuple = (16, 32),
+                        rate: float = float("inf"),
+                        seed: int = 0) -> List[Request]:
+    """Repetitive-text workload: each prompt tiles a short random
+    pattern of `period` tokens — the canonical n-gram (prompt-lookup)
+    speculation scenario: the proposer finds the recurring n-gram in
+    the prompt/generated history and drafts its continuation."""
+    rng = np.random.default_rng(seed)
+    arrivals = _arrivals(rng, n, rate)
+    plens = _sample_lengths(rng, prompt_len, n)
+    lo, hi = max_new
+    out = []
+    for i in range(n):
+        pattern = rng.integers(0, vocab_size, period).astype(np.int32)
+        reps = -(-int(plens[i]) // period)
+        out.append(Request(
+            rid=i,
+            prompt=np.tile(pattern, reps)[:int(plens[i])],
+            max_new_tokens=int(rng.integers(lo, hi + 1)),
+            arrival=float(arrivals[i])))
+    return out
+
+
 def summarize(completions: Sequence[Completion], wall: float,
               engine: Optional[ServingEngine] = None) -> Dict:
     """Throughput / latency telemetry over a finished run."""
@@ -269,4 +329,29 @@ def summarize(completions: Sequence[Completion], wall: float,
             "block_copies": runner.block_copies,
             "evictions": engine.allocator.cache_evictions,
         }
+        if engine.speculate:
+            dispatches = engine.steps      # decode + verify iterations
+            stats["speculation"] = {
+                "enabled": True,
+                "k": engine.speculate,
+                "draft": engine.draft,
+                "verify_dispatches": runner.verify_dispatches,
+                "verify_shapes": len(runner.verify_shapes),
+                "verify_buckets": len(runner.verify_buckets),
+                # chain slots dispatched vs true chain tokens: the gap
+                # is bucket-padding waste (verify compute scales with
+                # it — the term that erodes the spec win at high slots)
+                "verify_chain_tokens": runner.verify_chain_tokens,
+                "verify_padded_tokens": runner.verify_padded_tokens,
+                "proposed_tokens": sched.proposed_tokens,
+                "accepted_tokens": sched.accepted_tokens,
+                "acceptance_rate": round(
+                    sched.accepted_tokens / max(sched.proposed_tokens, 1),
+                    3),
+                # each request's first token comes from its prefill
+                # dispatch, not a decode/verify one — exclude it
+                "tokens_per_dispatch": round(
+                    max(gen - len(completions), 0) / max(dispatches, 1),
+                    3),
+            }
     return stats

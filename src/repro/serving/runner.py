@@ -2,10 +2,11 @@
 
 The bottom layer of the engine (scheduler -> block manager -> runner).
 It owns everything that touches the device: the paged KV state, the
-device mirror of the block tables, the jitted prefill / decode / block-
-copy callables, and sampling. It knows nothing about queues, refcounts,
-or request lifecycle — the scheduler hands it fully-resolved work
-(token rows, table rows, slot ids) and gets tokens back.
+device mirror of the block tables, the jitted prefill / decode /
+verify / block-copy callables, and sampling. It knows nothing about
+queues, refcounts, or request lifecycle — the scheduler hands it
+fully-resolved work (token rows, table rows, slot ids) and gets tokens
+back.
 
 Bucketed batched prefill: queued prompts are padded to a small set of
 power-of-two suffix-length buckets and dispatched several at a time
@@ -14,12 +15,21 @@ two, padded with inert rows that write only the null block). One jitted
 instance serves every batch with the same (width, length) bucket, so
 the number of prefill compilations is bounded by
 len(width_buckets) * len(length_buckets) — not by the number of
-distinct prompt lengths in the workload, which is what made the
-one-sequence-per-jit-call admission path recompile-heavy under mixed
-traffic. `prefill_shapes` records the distinct compiled shapes so
-benchmarks can assert the bound.
+distinct prompt lengths in the workload. `prefill_shapes` records the
+distinct compiled shapes so benchmarks can assert the bound.
 
-All jitted state is donated, so pools update in place.
+Bucketed verify (speculative decoding): draft chains are padded to a
+small grid of chain-length buckets (`verify_buckets`, powers of two up
+to speculate+1) and dispatched through `lm.decode_verify_paged` — the
+same trick, so verify compilations are bounded by the bucket grid, not
+by the per-step draft lengths. `verify()` returns the greedy token at
+every chain position; `commit()` then restores each lane's recurrent
+state at its accepted length (attention needs no commit — stale K/V
+past the accepted point is position-masked until overwritten).
+
+All jitted state is donated, so pools update in place. The bucket-grid
+helpers live in `serving/bucketing.py` (shared with the bench's shape
+assertions).
 """
 from __future__ import annotations
 
@@ -34,13 +44,11 @@ from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.serving import kv_cache
 from repro.serving.block_manager import NULL_BLOCK
+from repro.serving.bucketing import (chain_buckets, next_pow2,  # noqa: F401
+                                     normalize_buckets, pick_bucket,
+                                     width_buckets)
 
-
-def next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+RECURRENT_KINDS = ("rwkv", "rec")
 
 
 @dataclasses.dataclass
@@ -69,43 +77,42 @@ class ModelRunner:
                  block_size: int, num_blocks: int, max_blocks_per_seq: int,
                  temperature: float = 0.0, seed: int = 0,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 prefill_max_batch: int = 4):
+                 prefill_max_batch: int = 4, speculate: int = 0):
         self.cfg = cfg
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
         self.temperature = temperature
         self._key = jax.random.PRNGKey(seed)
+        # greedy dispatches take a CONSTANT key so the compiled trace
+        # never captures sampler state (the live key used to be passed
+        # as a dummy, making greedy dispatch depend on it spuriously)
+        self._greedy_key = jax.random.PRNGKey(0)
         self.state = kv_cache.init_paged_state(cfg, num_slots, num_blocks,
                                                block_size)
         self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size)
+        self._has_recurrent = any(
+            k in RECURRENT_KINDS
+            for k in cfg.block_pattern + cfg.prefix_pattern)
 
         max_len = max_blocks_per_seq * block_size
-        if prefill_buckets:
-            self.prefill_buckets = sorted(set(int(b) for b in prefill_buckets))
-        else:
-            self.prefill_buckets, b = [], min(16, next_pow2(max_len))
-            while b < max_len:
-                self.prefill_buckets.append(b)
-                b *= 2
-        if not self.prefill_buckets or self.prefill_buckets[-1] < max_len:
-            self.prefill_buckets.append(next_pow2(max_len))
+        self.prefill_buckets = normalize_buckets(
+            prefill_buckets, max_len, start=min(16, next_pow2(max_len)))
         self.prefill_max_batch = max(1, prefill_max_batch)
-        self.width_buckets = []
-        w = 1
-        while w < self.prefill_max_batch:
-            self.width_buckets.append(w)
-            w *= 2
-        self.width_buckets.append(self.prefill_max_batch)
+        self.width_buckets = width_buckets(self.prefill_max_batch)
+        self.speculate = max(0, speculate)
+        self.verify_buckets = chain_buckets(self.speculate)
 
         # host tables + device mirror (refreshed lazily when dirty)
         self._tables = np.zeros((num_slots, max_blocks_per_seq), np.int32)
         self._tables_dev = jnp.asarray(self._tables)
         self._tables_dirty = False
 
-        # telemetry; prefill_shapes is process-cumulative (compilations
+        # telemetry; *_shapes are process-cumulative (compilations
         # persist across runs), the counters are reset per run
         self.prefill_shapes: set = set()     # distinct (width, Ls) dispatched
+        self.verify_shapes: set = set()      # distinct chain buckets T
+        self._snaps = None                   # pending recurrent snapshots
         self.reset_stats()
 
         def _decode(state, tokens, positions, tables, key):
@@ -118,6 +125,20 @@ class ModelRunner:
             return tok.astype(jnp.int32), state
 
         self._decode_fn = jax.jit(_decode, donate_argnums=(0,))
+
+        def _verify(state, tokens, positions, counts, tables):
+            logits, state, snaps = lm.decode_verify_paged(
+                params, cfg, state, tokens, positions, counts, tables)
+            # speculation is greedy-only (the accept rule compares the
+            # model's argmax against the draft)
+            return jnp.argmax(logits, -1).astype(jnp.int32), state, snaps
+
+        self._verify_fn = jax.jit(_verify, donate_argnums=(0,))
+
+        def _commit(state, snaps, idx):
+            return lm.commit_decode_state(cfg, state, snaps, idx)
+
+        self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
 
         def _prefill(state, toks, lengths, cached, rows, slots):
             return lm.prefill_paged(params, cfg, state, toks, lengths,
@@ -135,6 +156,9 @@ class ModelRunner:
         self.prefill_padded_tokens = 0       # token slots incl. padding
         self.prefill_computed_tokens = 0     # true suffix tokens computed
         self.block_copies = 0
+        self.verify_dispatches = 0
+        self.verify_padded_tokens = 0        # chain slots incl. padding
+        self.verify_chain_tokens = 0         # true chain tokens verified
 
     # ------------------------------------------------------------------
     # block tables
@@ -160,10 +184,11 @@ class ModelRunner:
 
     def suffix_bucket(self, n: int) -> int:
         """Smallest configured length bucket covering n suffix tokens."""
-        for b in self.prefill_buckets:
-            if b >= n:
-                return b
-        return self.prefill_buckets[-1]
+        return pick_bucket(n, self.prefill_buckets)
+
+    def chain_bucket(self, n: int) -> int:
+        """Smallest verify bucket covering an n-token draft chain."""
+        return pick_bucket(n, self.verify_buckets)
 
     def prefill(self, rows: List[PrefillRow]) -> np.ndarray:
         """Run one bucketed batched prefill and sample each row's first
@@ -171,7 +196,7 @@ class ModelRunner:
         caller's TTFT clock covers it). Returns (len(rows),) int32."""
         n = len(rows)
         ls = self.suffix_bucket(max(r.suffix_len for r in rows))
-        width = next((w for w in self.width_buckets if w >= n), n)
+        width = pick_bucket(n, self.width_buckets)
         toks = np.zeros((width, ls), np.int32)
         lengths = np.zeros(width, np.int32)
         cached = np.zeros(width, np.int32)
@@ -206,11 +231,38 @@ class ModelRunner:
         if self.temperature > 0:
             self._key, sub = jax.random.split(self._key)
         else:
-            sub = self._key              # unused by the greedy trace
-        next_tok, self.state = self._decode_fn(
+            sub = self._greedy_key      # constant: greedy trace must not
+        next_tok, self.state = self._decode_fn(  # depend on sampler state
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
             self._tables_device(), sub)
         return np.asarray(next_tok)
+
+    def verify(self, tokens: np.ndarray, positions: np.ndarray,
+               counts: np.ndarray) -> np.ndarray:
+        """One batched multi-token verify dispatch. tokens: (num_slots,
+        T) draft chains right-padded to a verify bucket; positions /
+        counts: (num_slots,) int32 (counts 0 = lane sits out). Returns
+        the greedy token at every chain position, (num_slots, T) int32.
+        Recurrent snapshots are held until the matching `commit`."""
+        T = tokens.shape[1]
+        self.verify_shapes.add(T)
+        self.verify_dispatches += 1
+        self.verify_padded_tokens += tokens.shape[0] * T
+        self.verify_chain_tokens += int(counts.sum())
+        out, self.state, self._snaps = self._verify_fn(
+            self.state, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(counts), self._tables_device())
+        return np.asarray(out)
+
+    def commit(self, idx: np.ndarray) -> None:
+        """Commit per-lane recurrent state at `idx` accepted chain
+        tokens (0 = keep the pre-verify state). Must follow every
+        `verify`; a no-op for pure-attention architectures, whose
+        rollback is entirely positional."""
+        if self._has_recurrent and self._snaps is not None:
+            self.state = self._commit_fn(self.state, self._snaps,
+                                         jnp.asarray(idx))
+        self._snaps = None
 
     def copy_block(self, src: int, dst: int) -> None:
         """Device-side copy-on-write: clone block `src`'s K/V into `dst`

@@ -1,4 +1,5 @@
-"""Scheduler: queue, admission policy, request lifecycle, eviction.
+"""Scheduler: queue, admission policy, request lifecycle, eviction,
+and the propose/accept/rollback half of speculative decoding.
 
 The top layer of the serving engine (scheduler -> block manager ->
 runner). It owns every request-level decision and no device state:
@@ -9,31 +10,45 @@ runner). It owns every request-level decision and no device state:
     fall in the SAME bucket (bounded queue-jumping: other buckets keep
     their place) until slots, blocks, or the prefill batch width run
     out. The whole group is admitted in ONE `runner.prefill` dispatch.
-  * conservative block reservation — ceil((prompt + max_new) /
-    block_size) blocks per request minus fully-shared prefix blocks, so
-    an admitted request can never deadlock on cache memory. A shared
-    first-divergent block is counted as needing its copy-on-write
-    replacement up front, so the later copy can never fail.
+  * incremental block allocation under a conservative budget —
+    admission allocates only the prompt's blocks and RESERVES (but does
+    not bind) the ceil((prompt + max_new) / block_size) remainder as a
+    per-slot budget; generation claims physical blocks lazily as
+    positions cross block boundaries and a draft chain claims the
+    blocks its tokens would write up front. The global reserved-budget
+    counter keeps admission honest (a live sequence can always claim
+    its full budget — no deadlock), while unclaimed blocks stay in the
+    allocator's pools, so cached prefix blocks survive longer under
+    pressure than with bind-everything-at-admission.
   * prefix sharing + copy-on-write — matched full blocks are shared by
     refcount; a partially-matched (first divergent) block is shared and
     then copied before its first write: eagerly at admission when the
     prompt itself diverges mid-block, lazily at the first decode step
     when the whole prompt was cached and only generation writes into it.
+  * speculative decoding — each slot owns an n-gram draft proposer
+    (serving/draft.py) over its prompt + generated history.
+    `prepare_verify` assembles per-lane draft chains [pending, d1..dk],
+    claims the blocks the chain would write, and pads to the runner's
+    verify bucket; `consume_verify` accepts the longest agreeing draft
+    prefix plus the one token the model produced anyway, commits
+    recurrent state at the accepted length through the runner, and
+    frees exactly the blocks a rejected suffix had claimed (the
+    allocator returns to its pre-draft state — property-tested).
   * lifecycle + eviction — finished sequences (max_new_tokens or eos)
-    are evicted: their table row is nulled, their lane freed, and every
-    block reference dropped (shared prompt blocks survive in the block
-    manager's cached-free pool for future hits).
+    are evicted: their table row is nulled, their lane freed, every
+    block reference dropped, and their unclaimed budget released.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.serving.block_manager import (NULL_BLOCK, BlockAllocator,
                                          PrefixMatch)
+from repro.serving.draft import make_proposer
 from repro.serving.runner import ModelRunner, PrefillRow
 
 
@@ -65,21 +80,34 @@ class _Slot:
     pos: int                      # position of the next token to feed
     pending: int                  # token to feed at `pos`
     out: List[int]
+    hist: List[int]               # prompt + generated (proposer input)
     t_admit: float
     t_first: float
     cached: int                   # prefix-cache hit tokens at admission
+    n_blocks: int                 # bound physical blocks (row prefix)
+    prompt_blocks: int            # blocks covering the prompt (floor)
+    budget: int                   # reserved-but-unbound blocks remaining
     cow_block: Optional[int]      # reserved private copy for the shared
     cow_index: int = -1           # first-divergent block (lazy COW)
+
+    def emit(self, tokens: List[int]) -> None:
+        """Append generated tokens to the output AND the proposer
+        history in one place — the two views must never desynchronize
+        (hist == prompt + out is the proposer's input invariant)."""
+        self.out.extend(tokens)
+        self.hist.extend(tokens)
 
 
 @dataclasses.dataclass
 class _Plan:
-    """A reserved admission: blocks held, table row built, ready for one
-    row of a batched prefill dispatch."""
+    """A reserved admission: prompt blocks held, budget reserved, table
+    row built, ready for one row of a batched prefill dispatch."""
     req: Request
     table_row: np.ndarray
     slot: int
     cached: int
+    n_blocks: int
+    budget: int
     cow_block: Optional[int]
     cow_index: int
     t_admit: float
@@ -96,7 +124,8 @@ class Scheduler:
     def __init__(self, allocator: BlockAllocator, runner: ModelRunner, *,
                  num_slots: int, block_size: int, max_blocks_per_seq: int,
                  max_seq_len: int, prefix_cache: bool,
-                 now_fn: Callable[[], float]):
+                 now_fn: Callable[[], float], speculate: int = 0,
+                 draft: str = "ngram", ngram: int = 3):
         self.allocator = allocator
         self.runner = runner
         self.num_slots = num_slots
@@ -105,8 +134,15 @@ class Scheduler:
         self.max_seq_len = max_seq_len
         self.prefix_cache = prefix_cache
         self._now = now_fn
+        self.speculate = max(0, speculate)
+        # one proposer per lane: drafting is per-sequence state-free
+        # today (n-gram lookup), but the ownership point is the seam a
+        # stateful draft-model proposer will need
+        self._proposers = [make_proposer(draft, ngram=ngram)
+                           for _ in range(num_slots)] if speculate else []
         self._queue: Deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * num_slots
+        self._reserved_budget = 0     # sum of live slots' budgets
         self.completions: List[Completion] = []
         self.reset_stats()
 
@@ -114,6 +150,8 @@ class Scheduler:
         self.prompt_tokens = 0
         self.cached_prompt_tokens = 0
         self.prefix_hit_requests = 0
+        self.proposed_tokens = 0      # draft tokens sent to verify
+        self.accepted_tokens = 0      # draft tokens accepted
 
     # ------------------------------------------------------------------
     # queue
@@ -149,23 +187,40 @@ class Scheduler:
 
     def _reserve(self, req: Request, slot: int,
                  match: PrefixMatch) -> Optional[_Plan]:
-        """Share the matched prefix blocks, allocate the rest, build the
+        """Share the matched prefix blocks, allocate the prompt's
+        remaining blocks, reserve the generation budget, build the
         table row. Returns None (nothing held) if the pool is short."""
         P = len(req.prompt)
-        total = -(-(P + req.max_new_tokens) // self.block_size)
+        bs = self.block_size
+        total = -(-(P + req.max_new_tokens) // bs)
+        n_prompt = -(-P // bs)
+        budget = total - n_prompt
         f = len(match.full_blocks)
+        # the admission gate is still conservative (the FULL extent must
+        # be coverable) so an admitted request can never deadlock — but
+        # only the prompt blocks are bound now; the rest stays a budget.
+        # Matched blocks parked in the cached-free pool count as
+        # allocatable supply in num_free, yet share() is about to revive
+        # them — charge for those too, or the reserved-budget invariant
+        # (num_free >= _reserved_budget, what makes _claim_blocks
+        # infallible) breaks under a tight pool.
+        revived = sum(1 for b in match.blocks()
+                      if self.allocator.refcount(b) == 0)
+        if (total - f + revived
+                > self.allocator.num_free - self._reserved_budget):
+            return None
         self.allocator.share(match)       # revive + hold before alloc
-        fresh = self.allocator.alloc(total - f)
-        if fresh is None:
+        fresh = self.allocator.alloc(n_prompt - f)
+        if fresh is None:                 # unreachable given the gate
             self.allocator.unshare(match)
             return None
         row = np.full(self.max_blocks_per_seq, NULL_BLOCK, np.int32)
         row[:f] = match.full_blocks
-        cached = f * self.block_size + match.partial_len
+        cached = f * bs + match.partial_len
         cow_block, cow_index = None, -1
         rest = fresh
         if match.partial_block is not None:
-            if match.partial_len == P - f * self.block_size:
+            if match.partial_len == P - f * bs:
                 # whole prompt cached up to this block: keep sharing it;
                 # generation's first write will trigger the lazy copy
                 row[f] = match.partial_block
@@ -179,14 +234,15 @@ class Scheduler:
             row[f + 1:f + 1 + len(rest)] = rest
         else:
             row[f:f + len(fresh)] = fresh
+        self._reserved_budget += budget
         self.prompt_tokens += P
         self.cached_prompt_tokens += min(cached, P - 1)
         if cached > 0:
             self.prefix_hit_requests += 1
             self.allocator.touch(match.full_blocks)
         return _Plan(req=req, table_row=row, slot=slot, cached=cached,
-                     cow_block=cow_block, cow_index=cow_index,
-                     t_admit=self._now())
+                     n_blocks=n_prompt, budget=budget, cow_block=cow_block,
+                     cow_index=cow_index, t_admit=self._now())
 
     def admit(self) -> None:
         """Form same-bucket groups from the queue and admit each group
@@ -234,20 +290,81 @@ class Scheduler:
             self.runner.write_table(p.slot, p.table_row)
             self._slots[p.slot] = _Slot(
                 req=p.req, table_row=p.table_row, pos=P, pending=int(tok),
-                out=[int(tok)], t_admit=p.t_admit, t_first=t_first,
-                cached=p.cached, cow_block=p.cow_block,
+                out=[int(tok)],
+                hist=[int(t) for t in p.req.prompt] + [int(tok)],
+                t_admit=p.t_admit, t_first=t_first, cached=p.cached,
+                n_blocks=p.n_blocks, prompt_blocks=p.n_blocks,
+                budget=p.budget, cow_block=p.cow_block,
                 cow_index=p.cow_index)
             self._maybe_finish(p.slot)
+
+    # ------------------------------------------------------------------
+    # incremental block claim / release (the draft reservation)
+    # ------------------------------------------------------------------
+
+    def _claim_blocks(self, slot_id: int, last_pos: int) -> int:
+        """Bind physical blocks so the table covers a write at
+        `last_pos`, drawing them from the slot's reserved budget.
+        Cannot fail: admission guaranteed the budget, and the global
+        reserved counter kept later admissions from eating it.
+        Returns the number of blocks claimed."""
+        s = self._slots[slot_id]
+        need = last_pos // self.block_size + 1
+        claimed = 0
+        while s.n_blocks < need:
+            got = self.allocator.alloc(1)
+            assert got is not None and s.budget > 0, \
+                "block budget invariant violated"
+            s.table_row[s.n_blocks] = got[0]
+            s.n_blocks += 1
+            s.budget -= 1
+            self._reserved_budget -= 1
+            claimed += 1
+        if claimed:
+            self.runner.write_table(slot_id, s.table_row)
+        return claimed
+
+    def _trim_blocks(self, slot_id: int, last_pos: int) -> int:
+        """Release bound blocks past the last committed write at
+        `last_pos` back to the allocator and return them to the slot's
+        budget — the rollback of `_claim_blocks` for a rejected draft
+        suffix. Never trims into the prompt. Returns #blocks freed."""
+        s = self._slots[slot_id]
+        keep = max(last_pos // self.block_size + 1, s.prompt_blocks)
+        freed = 0
+        while s.n_blocks > keep:
+            s.n_blocks -= 1
+            self.allocator.decref(int(s.table_row[s.n_blocks]))
+            s.table_row[s.n_blocks] = NULL_BLOCK
+            s.budget += 1
+            self._reserved_budget += 1
+            freed += 1
+        if freed:
+            self.runner.write_table(slot_id, s.table_row)
+        return freed
+
+    def _fire_cow(self, slot_id: int) -> None:
+        """A slot about to write into a still-shared first-divergent
+        block swaps in its reserved private copy first (lazy COW)."""
+        s = self._slots[slot_id]
+        if s.cow_block is None:
+            return
+        old = int(s.table_row[s.cow_index])
+        self.runner.copy_block(old, s.cow_block)
+        self.allocator.decref(old)
+        s.table_row[s.cow_index] = s.cow_block
+        self.runner.write_table(slot_id, s.table_row)
+        s.cow_block = None
 
     # ------------------------------------------------------------------
     # decode-side lifecycle
     # ------------------------------------------------------------------
 
     def prepare_decode(self):
-        """Assemble the decode batch; fire pending lazy copy-on-writes
-        (a slot about to write into a still-shared first-divergent block
-        swaps in its reserved private copy first). Returns (tokens,
-        positions, active slot ids) or None when no lane is active."""
+        """Assemble the plain one-token decode batch; fire pending lazy
+        copy-on-writes and claim the block each lane's write needs.
+        Returns (tokens, positions, active slot ids) or None when no
+        lane is active."""
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return None
@@ -255,13 +372,8 @@ class Scheduler:
         positions = np.zeros(self.num_slots, np.int32)
         for i in active:
             s = self._slots[i]
-            if s.cow_block is not None:
-                old = int(s.table_row[s.cow_index])
-                self.runner.copy_block(old, s.cow_block)
-                self.allocator.decref(old)
-                s.table_row[s.cow_index] = s.cow_block
-                self.runner.write_table(i, s.table_row)
-                s.cow_block = None
+            self._fire_cow(i)
+            self._claim_blocks(i, s.pos)
             tokens[i] = s.pending
             positions[i] = s.pos
         return tokens, positions, active
@@ -273,8 +385,92 @@ class Scheduler:
             s = self._slots[i]
             s.pos += 1
             s.pending = int(next_tok[i])
-            s.out.append(s.pending)
+            s.emit([s.pending])
             self._maybe_finish(i)
+
+    # ------------------------------------------------------------------
+    # speculative decoding: propose -> verify -> accept / rollback
+    # ------------------------------------------------------------------
+
+    def prepare_verify(self):
+        """Assemble a verify batch of per-lane draft chains
+        [pending, d_1 .. d_k] (k from each lane's proposer, capped so
+        the chain can never emit past max_new_tokens), claim the blocks
+        each chain would write, and pad to the runner's chain bucket.
+        Returns (tokens (num_slots, T), positions, counts, active,
+        drafts) — or None when no lane proposed anything, so the engine
+        falls back to the plain decode dispatch at zero overhead."""
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return None
+        drafts: Dict[int, List[int]] = {}
+        max_chain = 1
+        for i in active:
+            s = self._slots[i]
+            k = min(self.speculate, s.req.max_new_tokens - len(s.out) - 1)
+            d = self._proposers[i].propose(s.hist, k) if k > 0 else []
+            # clamp: the propose(history, k) seam must not let an
+            # over-eager proposer overflow the chain bucket, emit past
+            # max_new_tokens, or outrun the block budget
+            drafts[i] = list(d)[:max(k, 0)]
+            max_chain = max(max_chain, 1 + len(drafts[i]))
+        if max_chain == 1:
+            return None
+        T = self.runner.chain_bucket(max_chain)
+        tokens = np.zeros((self.num_slots, T), np.int32)
+        positions = np.zeros(self.num_slots, np.int32)
+        counts = np.zeros(self.num_slots, np.int32)
+        for i in active:
+            s = self._slots[i]
+            chain = [s.pending] + drafts[i]
+            self._fire_cow(i)
+            self._claim_blocks(i, s.pos + len(chain) - 1)
+            tokens[i, :len(chain)] = chain
+            positions[i] = s.pos
+            counts[i] = len(chain)
+            self.proposed_tokens += len(drafts[i])
+        return tokens, positions, counts, active, drafts
+
+    def consume_verify(self, active: List[int], drafts: Dict[int, List[int]],
+                       out_tok: np.ndarray) -> None:
+        """Accept/rollback after a verify dispatch. out_tok: (num_slots,
+        T) greedy tokens at every chain position. Per lane: accept the
+        longest prefix of the draft that agrees with the model plus the
+        one bonus token, commit recurrent state at the accepted length,
+        free the blocks a rejected suffix claimed, advance, and finish
+        lanes that hit max_new_tokens or eos (the emitted run is cut at
+        the first eos)."""
+        commit_idx = np.zeros(self.num_slots, np.int32)
+        accepted: Dict[int, int] = {}
+        for i in active:
+            d = drafts[i]
+            a = 0
+            while a < len(d) and int(out_tok[i, a]) == d[a]:
+                a += 1
+            accepted[i] = a
+            commit_idx[i] = a + 1         # chain tokens consumed
+        # restore recurrent slot state at each lane's accepted length
+        # BEFORE host bookkeeping (no-op for pure-attention archs)
+        self.runner.commit(commit_idx)
+        for i in active:
+            s = self._slots[i]
+            a = accepted[i]
+            emitted = [int(out_tok[i, t]) for t in range(a + 1)]
+            if s.req.eos_id is not None and s.req.eos_id in emitted:
+                emitted = emitted[:emitted.index(s.req.eos_id) + 1]
+            # accepted = drafts that actually materialized as output
+            # (drafts agreeing past a truncating eos don't count)
+            self.accepted_tokens += len(emitted) - 1
+            s.emit(emitted)
+            s.pos += a + 1
+            s.pending = emitted[-1]
+            # rejected suffix: free exactly the blocks it claimed
+            self._trim_blocks(i, s.pos - 1)
+            self._maybe_finish(i)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
 
     def _maybe_finish(self, slot_id: int) -> None:
         s = self._slots[slot_id]
@@ -294,5 +490,6 @@ class Scheduler:
                 self.allocator.decref(int(b))
         if s.cow_block is not None:       # reserved but never written
             self.allocator.decref(s.cow_block)
+        self._reserved_budget -= s.budget
         self.runner.clear_table(slot_id)
         self._slots[slot_id] = None

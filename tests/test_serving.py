@@ -418,6 +418,36 @@ def test_prefix_cache_copy_on_write_paths():
         np.testing.assert_array_equal(out[r.rid], exp)
 
 
+def test_prefix_cache_hit_under_tight_pool_backpressures():
+    """Admission must charge for matched blocks it revives from the
+    cached-free pool: with a pool sized so a cache-hit admission would
+    otherwise over-commit the reserved block budget, the request has to
+    wait (backpressure), not crash a later infallible claim. Regression
+    for the incremental-allocation admission gate."""
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    pa = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    pc = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng = ServingEngine(params, cfg, num_slots=2, block_size=4,
+                        max_seq_len=16, num_blocks=7, prefix_cache=True)
+    # A completes and parks its 2 prompt blocks in the cached-free pool
+    eng.run([Request(rid=0, prompt=pa, max_new_tokens=8)])
+    # C (distinct) binds blocks + budget; B (cache hit on A) must wait
+    # until C's blocks come back even though num_free looks sufficient
+    reqs = [Request(rid=1, prompt=pc, max_new_tokens=8),
+            Request(rid=2, prompt=pa.copy(), max_new_tokens=8)]
+    done = eng.run(list(reqs))
+    assert len(done) == 2
+    for c in done:
+        exp = np.asarray(generate(params, cfg,
+                                  np.asarray(reqs[c.rid - 1].prompt)[None],
+                                  8))[0]
+        np.testing.assert_array_equal(c.tokens, exp)
+    # everything back in the allocatable supply (free or cached-free)
+    assert eng.allocator.num_free == eng.allocator.num_blocks - 1
+
+
 def test_prefix_cache_rejected_for_recurrent_archs():
     cfg = get_config("recurrentgemma-2b").reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)

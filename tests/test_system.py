@@ -136,6 +136,30 @@ def test_hlo_parser_elementwise_real_program():
     assert r["elementwise_flops"] >= 3 * 64 * 512  # exp, div, max/sum
 
 
+def test_roofline_elementwise_compute_term():
+    """The roofline compute bound must charge elementwise FLOPs to the
+    VPU on top of dot FLOPs on the MXU — pinned on the hand-written HLO
+    fixture above (4n+n+1 elementwise FLOPs, zero dot FLOPs), where a
+    dot-only bound would be exactly zero."""
+    from repro.launch.hlo_analysis import (PEAK_FLOPS, VPU_FLOPS,
+                                           analyze_hlo, roofline)
+    r = analyze_hlo(_EW_HLO_FIXTURE, entry="main")
+    ew = 4 * 8 * 32 + 8 * 32 + 1
+    assert r["elementwise_flops"] == ew
+    roof = roofline(r["dot_flops"], hbm_bytes=0.0, coll_stats={},
+                    n_chips=1, model_flops=0.0,
+                    ew_flops=r["elementwise_flops"])
+    assert roof.compute_s == ew / VPU_FLOPS
+    assert roof.ew_flops == ew
+    assert roof.bottleneck == "compute"
+    # both units are charged serially when dot FLOPs are present
+    roof2 = roofline(1e9, hbm_bytes=0.0, coll_stats={}, n_chips=1,
+                     model_flops=0.0, ew_flops=ew)
+    assert roof2.compute_s == 1e9 / PEAK_FLOPS + ew / VPU_FLOPS
+    # omitting ew_flops reproduces the old dot-only bound
+    assert roofline(1e9, 0.0, {}, 1, 0.0).compute_s == 1e9 / PEAK_FLOPS
+
+
 def test_sanitize_spec():
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import sanitize_spec
