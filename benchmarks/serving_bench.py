@@ -26,14 +26,25 @@ EVERY spec-arm output is checked token-identical to generate() at
 temperature 0 (the correctness gate — speculation must never change
 greedy output).
 
+With --temperature T (> 0, optionally --top-k/--top-p) two more arms
+run with per-request SamplingParams (each request carries its own
+seed): a sampled engine arm gated on BATCH-COMPOSITION INVARIANCE
+(every request rerun alone must reproduce its batched output
+bit-for-bit — the position-keyed-PRNG contract) and, when --speculate
+is also on, a speculative-SAMPLING arm (Leviathan accept/reject) gated
+on acceptance > 0 plus the same invariance. The record gains a
+`sampling` block describing the config and a `sampling_gate` with the
+results; greedy-only records are unchanged.
+
     PYTHONPATH=src python benchmarks/serving_bench.py --arch smollm-135m \
         --workload repetitive --requests 24 --speculate 4 --draft ngram
 
 --smoke shrinks everything for the CI gate (fixed seed) and asserts
-acceptance rate > 0, greedy bit-identity, and the verify-compilation
-bound. Writes the trajectory record to
-experiments/serving/bench_<arch>_<workload>.json. Importable:
-`run_bench([...])` returns the record (used by the CI smoke test).
+acceptance rate > 0, greedy bit-identity, the verify-compilation
+bound, and (with --temperature) the sampled-arm gates. Writes the
+trajectory record to experiments/serving/bench_<arch>_<workload>.json.
+Importable: `run_bench([...])` returns the record (used by the CI
+smoke test).
 """
 from __future__ import annotations
 
@@ -46,6 +57,8 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+import dataclasses
+
 from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
@@ -53,6 +66,7 @@ from repro.serving.bucketing import pick_bucket
 from repro.serving.engine import (ServingEngine, repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.sampling import SamplingParams
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "serving")
@@ -85,24 +99,25 @@ def run_engine(engine, requests):
                                                engine), done
 
 
-def _make_requests(args, cfg):
+def _make_requests(args, cfg, sampling=None):
     if args.workload == "shared-prefix":
         return shared_prefix_requests(
             args.requests, vocab_size=cfg.vocab_size,
             prefix_len=args.prefix_len,
             suffix_len=tuple(args.suffix_len), max_new=tuple(args.max_new),
-            n_prefixes=args.n_prefixes, seed=args.seed)
+            n_prefixes=args.n_prefixes, sampling=sampling, seed=args.seed)
     plen = (args.prompt_len[0] if len(args.prompt_len) == 1
             else tuple(args.prompt_len))
     if args.workload == "repetitive":
         return repetitive_requests(
             args.requests, vocab_size=cfg.vocab_size, period=args.period,
-            prompt_len=plen, max_new=tuple(args.max_new), seed=args.seed)
+            prompt_len=plen, max_new=tuple(args.max_new),
+            sampling=sampling, seed=args.seed)
     if args.workload == "mixed" and len(args.prompt_len) == 1:
         plen = (max(args.prompt_len[0] // 4, 1), args.prompt_len[0])
     return synthetic_requests(args.requests, vocab_size=cfg.vocab_size,
                               prompt_len=plen, max_new=tuple(args.max_new),
-                              seed=args.seed)
+                              sampling=sampling, seed=args.seed)
 
 
 def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache,
@@ -131,6 +146,23 @@ def _check_identity(params, cfg, reqs, done) -> bool:
     return True
 
 
+def _check_batch_invariance(engine, reqs, done, probes=2) -> bool:
+    """The per-request sampling gate: a sampled request rerun ALONE (no
+    batch mates, fresh engine state) must reproduce its batched output
+    bit-for-bit — position-keyed PRNG makes the realization a pure
+    function of (seed, positions), never of batch composition. The
+    first `probes` requests are checked (None = every request — the
+    smoke gate's setting; large benchmark runs probe a prefix to keep
+    the gate's rerun cost bounded)."""
+    by_rid = {c.rid: c.tokens for c in done}
+    for r in (reqs if probes is None else reqs[:probes]):
+        engine.reset_prefix_cache()
+        solo = engine.run([dataclasses.replace(r, arrival=0.0)])
+        if not np.array_equal(solo[0].tokens, by_rid[r.rid]):
+            return False
+    return True
+
+
 def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -154,6 +186,11 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
                     help="n-gram speculative-decoding arm with K drafts")
     ap.add_argument("--draft", default="ngram", choices=["ngram"])
     ap.add_argument("--ngram", type=int, default=3)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 adds per-request-sampled arms (each request "
+                         "gets its own seed) with invariance gates")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed CI gate: shrink the workload "
@@ -172,6 +209,14 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         args.block_size = min(args.block_size, 4)
         if args.speculate == 0:
             args.speculate = 4
+        if args.temperature == 0.0:
+            # the sampled-speculation gates need a sampled arm
+            args.temperature = 0.8
+        if args.top_k == 0:
+            # concentrate the sampled stream so n-gram lookup recurs:
+            # with an unwarped near-uniform tiny-model distribution the
+            # proposer never matches and the acceptance gate is vacuous
+            args.top_k = 2
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -239,6 +284,46 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
             assert identical, "speculation changed greedy output"
             assert sp["acceptance_rate"] > 0, "no draft token accepted"
             assert shapes_ok and bucket_ok, "verify shapes escaped grid"
+    if args.temperature > 0:
+        base_sp = SamplingParams(temperature=args.temperature,
+                                 top_k=args.top_k, top_p=args.top_p,
+                                 seed=args.seed)
+        sreqs = _make_requests(args, cfg, sampling=base_sp)
+        record["sampling"] = {
+            "temperature": args.temperature, "top_k": args.top_k,
+            "top_p": args.top_p, "per_request_seed": True}
+        probes = None if args.smoke else 2
+        (sm_tok, sm_s, sm_stats, sm_done), sm_engine = _measure_engine(
+            params, cfg, args, sreqs, max_seq, prefix_cache=None)
+        invariant = _check_batch_invariance(sm_engine, sreqs, sm_done,
+                                            probes)
+        record["engine_sampled"] = sm_stats
+        gate = {"batch_invariant": invariant}
+        print(f"sampled_engine_tok_s,{sm_tok / sm_s:.1f},"
+              f"temperature {args.temperature}")
+        print(f"sampled_batch_invariant,{invariant},"
+              f"solo rerun == batched output")
+        if args.speculate > 0:
+            (ss_tok, ss_s, ss_stats, ss_done), ss_engine = _measure_engine(
+                params, cfg, args, sreqs, max_seq, prefix_cache=None,
+                speculate=args.speculate)
+            ssp = ss_stats["speculation"]
+            ss_invariant = _check_batch_invariance(ss_engine, sreqs,
+                                                   ss_done, probes)
+            record["engine_spec_sampled"] = ss_stats
+            gate["spec_sampled_acceptance"] = ssp["acceptance_rate"]
+            gate["spec_sampled_batch_invariant"] = ss_invariant
+            print(f"spec_sampled_acceptance_rate,{ssp['acceptance_rate']},"
+                  f"{ssp['accepted_tokens']} of {ssp['proposed_tokens']} "
+                  f"drafts (Leviathan accept/reject)")
+            print(f"spec_sampled_batch_invariant,{ss_invariant},")
+        record["sampling_gate"] = gate
+        if args.smoke:
+            assert invariant, "sampled output depends on batch composition"
+            assert gate.get("spec_sampled_acceptance", 1) > 0, \
+                "speculative sampling accepted no draft"
+            assert gate.get("spec_sampled_batch_invariant", True), \
+                "spec-sampled output depends on batch composition"
     print(f"serving_baseline_tok_s,{base_tps:.1f},")
     print(f"serving_engine_tok_s,{eng_tps:.1f},")
     print(f"serving_speedup,{record['speedup']:.2f},x over token-by-token")

@@ -5,8 +5,11 @@
 #   scripts/ci.sh full         # everything, including slow e2e tests
 #   scripts/ci.sh serving      # serving tests (-m serving) + the
 #                              # spec-decode smoke bench (fixed seed;
-#                              # asserts acceptance > 0 and greedy
-#                              # bit-identity vs generate())
+#                              # asserts acceptance > 0, greedy arm
+#                              # bit-identical to generate(), and —
+#                              # sampled-speculation gates — sampled
+#                              # acceptance > 0 + batch-composition
+#                              # invariance of sampled outputs)
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,6 +20,7 @@ case "${1:-fast}" in
   serving) shift
            python -m pytest -x -q -m serving "$@"
            exec python benchmarks/serving_bench.py --workload repetitive \
-                --smoke --seed 0 --out "$(mktemp -d)" ;;
+                --smoke --seed 0 --temperature 0.8 --top-k 2 \
+                --out "$(mktemp -d)" ;;
   *)                      exec python -m pytest -x -q "$@" ;;
 esac

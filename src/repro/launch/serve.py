@@ -10,10 +10,16 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --workload shared-prefix \
         --prefix-len 48 --prefix-cache --prefill-buckets 16 32 64
 
-    # n-gram speculative decoding (greedy-only; output stays
-    # bit-identical to generate()) on a repetitive-text workload:
+    # n-gram speculative decoding (greedy lanes stay bit-identical to
+    # generate()) on a repetitive-text workload:
     PYTHONPATH=src python -m repro.launch.serve --workload repetitive \
         --speculate 4 --draft ngram --max-new 16 32
+
+    # per-request sampling (position-keyed: batch-composition
+    # independent) with nucleus/top-k warping and a stop sequence —
+    # composes with speculation (distribution-preserving accept/reject):
+    PYTHONPATH=src python -m repro.launch.serve --temperature 0.8 \
+        --top-k 50 --top-p 0.95 --stop 7 11 --speculate 4
 
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
@@ -41,6 +47,7 @@ from repro.serving.engine import (Request, ServingEngine,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.sampling import SamplingParams
 
 
 # module-level so repeated generate() calls with the same shapes reuse the
@@ -89,29 +96,41 @@ def _prompt_len_spec(values):
     raise SystemExit("--prompt-len takes one or two ints")
 
 
+def _sampling_from_args(args):
+    """Per-workload SamplingParams from the CLI flags; None (greedy,
+    no stops) when every flag sits at its default."""
+    stop = (tuple(args.stop),) if args.stop else ()
+    if (args.temperature <= 0 and args.top_k == 0 and args.top_p >= 1.0
+            and not stop):
+        return None
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.seed, stop=stop)
+
+
 def _run_engine(args, cfg, params):
     rate = float("inf") if args.rate <= 0 else args.rate
     plen = _prompt_len_spec(args.prompt_len)
+    sampling = _sampling_from_args(args)
     if args.workload == "shared-prefix":
         reqs = shared_prefix_requests(
             args.requests, vocab_size=cfg.vocab_size,
             prefix_len=args.prefix_len, suffix_len=plen,
             max_new=tuple(args.max_new), n_prefixes=args.n_prefixes,
-            rate=rate, seed=args.seed)
+            rate=rate, sampling=sampling, seed=args.seed)
     elif args.workload == "repetitive":
         reqs = repetitive_requests(
             args.requests, vocab_size=cfg.vocab_size, period=args.period,
             prompt_len=plen, max_new=tuple(args.max_new), rate=rate,
-            seed=args.seed)
+            sampling=sampling, seed=args.seed)
     else:
         reqs = synthetic_requests(
             args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
-            max_new=tuple(args.max_new), rate=rate, seed=args.seed)
+            max_new=tuple(args.max_new), rate=rate, sampling=sampling,
+            seed=args.seed)
     max_prompt = max(len(r.prompt) for r in reqs)
     engine = ServingEngine(
         params, cfg, num_slots=args.slots, block_size=args.block_size,
         max_seq_len=max_prompt + max(args.max_new) + 1,
-        temperature=args.temperature, seed=args.seed,
         prefix_cache=args.prefix_cache,
         prefill_buckets=args.prefill_buckets,
         prefill_max_batch=args.prefill_batch,
@@ -184,7 +203,16 @@ def main():
                     help="max prompts admitted per prefill dispatch")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop arrival rate req/s (<=0: all at t=0)")
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy; "
+                         "each request gets its own PRNG stream)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--stop", type=int, nargs="+", default=None,
+                    help="stop token sequence: generation ends when the "
+                         "output ends with these ids")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

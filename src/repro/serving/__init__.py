@@ -16,12 +16,20 @@ Requests enter a queue; the scheduler admits same-bucket groups in one
 padded prefill dispatch; finished sequences are evicted and replaced
 mid-flight so the decode batch stays full under sustained load. Cache
 memory scales with live tokens (blocks), not batch x max_len, and
-identical prompt prefixes share physical blocks by refcount. With
-`speculate=K`, per-slot n-gram proposers (`draft.py`) draft up to K
-tokens that one bucketed verify dispatch checks; the longest agreeing
-prefix plus one bonus token is accepted and rejected drafts roll back
+identical prompt prefixes share physical blocks by refcount. Every
+request carries its own `SamplingParams` (`sampling.py`): temperature /
+top-k / top-p / per-request seed / stop sequences ride through the
+jitted dispatches as data, randomness is position-keyed
+(fold_in(PRNGKey(seed), pos)), so one batch freely mixes greedy,
+sampled, and speculative-sampled lanes and a request's realization is
+independent of batch composition. With `speculate=K`, per-slot n-gram
+proposers (`draft.py`) draft up to K tokens that one bucketed verify
+dispatch checks; greedy lanes accept the longest argmax-agreeing
+prefix plus one bonus token (output bit-identical to `generate()`),
+sampled lanes run Leviathan accept/reject with residual resampling
+(target distribution preserved exactly); rejected drafts roll back
 (positions for attention, snapshots for recurrent state, block claims
-for the allocator) — greedy output is bit-identical to `generate()`.
+for the allocator).
 """
 from repro.serving.block_manager import BlockAllocator, PrefixMatch
 from repro.serving.bucketing import next_pow2, pick_bucket, pow2_buckets
@@ -32,9 +40,11 @@ from repro.serving.engine import (Completion, Request, ServingEngine,
                                   synthetic_requests)
 from repro.serving.kv_cache import init_paged_state
 from repro.serving.runner import ModelRunner
-from repro.serving.scheduler import Scheduler
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler, StreamEvent
 
-__all__ = ["ServingEngine", "Request", "Completion", "synthetic_requests",
+__all__ = ["ServingEngine", "Request", "Completion", "SamplingParams",
+           "StreamEvent", "synthetic_requests",
            "shared_prefix_requests", "repetitive_requests", "summarize",
            "BlockAllocator", "PrefixMatch", "ModelRunner", "Scheduler",
            "init_paged_state", "NGramProposer", "make_proposer",

@@ -5,26 +5,43 @@ synchronization only at coarse boundaries — applied to inference. The
 engine composes:
 
   scheduler.Scheduler      queue, admission policy, request lifecycle,
-                           eviction, copy-on-write orchestration, draft
-                           proposers + speculative accept/rollback
+                           per-request SamplingParams + unified stop
+                           handling, eviction, copy-on-write
+                           orchestration, draft proposers +
+                           speculative accept/rollback, streaming
   block_manager.BlockAllocator
                            refcounted physical blocks + content-hash
                            prefix index (shared prompt blocks, COW)
   runner.ModelRunner       jitted bucketed batched prefill / decode /
                            multi-token verify dispatch, device block
-                           tables, sampling
+                           tables + per-slot sampling-config arrays
 
 Request lifecycle:
   queued -> admitted (prompt blocks bound, generation blocks reserved
   as a budget; cached prefix blocks shared by refcount; the prompt
   suffix prefilled in ONE batched jit dispatch together with other
-  same-bucket prompts; first token sampled from the prefill logits)
+  same-bucket prompts; first token sampled from the prefill logits
+  with the request's own SamplingParams)
   -> decoding (one lane of the batched decode_step_paged per
   iteration — or, with speculate=K, of a batched K-token verify whose
   accepted prefix advances several tokens per dispatch and whose
   rejected suffix rolls back positions, recurrent state, and block
-  claims) -> finished (max_new_tokens or eos) -> evicted (block refs
-  dropped — shared prompt blocks stay warm for future hits).
+  claims) -> finished (max_new_tokens or a stop sequence) -> evicted
+  (block refs dropped — shared prompt blocks stay warm for future
+  hits).
+
+Sampling is PER REQUEST (`Request.sampling = SamplingParams(...)`):
+one engine step freely mixes greedy, sampled, and speculative-sampled
+lanes in a single dispatch, and a request's realization is a pure
+function of (its seed, its positions) — bit-identical whether it runs
+alone or batched with anything else (see serving/sampling.py). Greedy
+lanes stay bit-identical to `generate()` with speculation on or off;
+sampled lanes under speculation preserve the target distribution via
+Leviathan accept/reject with residual resampling.
+
+`run()` blocks and returns completions; `stream()` is a generator of
+incremental `StreamEvent`s (new tokens per request as they land, then
+a done event carrying the Completion).
 
 Prefix caching shares immutable prompt blocks across sequences and is
 available for pure-attention block patterns; recurrent mixers (rwkv /
@@ -35,8 +52,10 @@ length-masked (see models/lm.py) so recurrent final states stay exact.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -44,7 +63,9 @@ from repro.configs.base import ModelConfig
 from repro.serving.block_manager import BlockAllocator
 from repro.serving.kv_cache import ATTN_KINDS
 from repro.serving.runner import ModelRunner
-from repro.serving.scheduler import Completion, Request, Scheduler
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import (Completion, Request, Scheduler,
+                                     StreamEvent)
 
 
 class ServingEngine:
@@ -55,33 +76,48 @@ class ServingEngine:
     num_blocks         pool size; default sizes the pool to num_slots
                        sequences of max_seq_len (plus the null block)
     max_seq_len        hard per-sequence cap (prompt + generated)
+    sampling           engine-default SamplingParams for requests that
+                       carry none (per-request Request.sampling wins)
     prefix_cache       None = auto (on for pure-attention patterns)
     prefill_buckets    suffix-length buckets for batched prefill
                        (default: powers of two up to max_seq_len)
     prefill_max_batch  max prompts per prefill dispatch
     speculate          max draft tokens per verify dispatch (0 = off);
-                       greedy-only (temperature must be 0): the accept
-                       rule compares the model's argmax to the draft,
-                       so speculation never changes greedy output
+                       composes with any SamplingParams — greedy lanes
+                       use the argmax-compare accept rule (output
+                       bit-identical to generate()), sampled lanes use
+                       distribution-preserving accept/reject
     draft              draft proposer kind ('ngram': prompt lookup)
     ngram              longest n-gram the proposer tries to match
+
+    temperature / seed are DEPRECATED engine-wide knobs, kept as a
+    back-compat shim: they map to a default SamplingParams (with a
+    DeprecationWarning). Prefer per-request Request.sampling.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  block_size: int = 16, max_seq_len: int = 512,
-                 num_blocks: Optional[int] = None, temperature: float = 0.0,
-                 seed: int = 0, prefix_cache: Optional[bool] = None,
+                 num_blocks: Optional[int] = None,
+                 sampling: Optional[SamplingParams] = None,
+                 temperature: Optional[float] = None,
+                 seed: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4, speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "serving engine currently supports text LMs only")
-        if speculate and temperature > 0:
-            raise ValueError(
-                "speculative decoding is greedy-only (the accept rule "
-                "compares the model's argmax to the draft); use "
-                "temperature=0 or speculate=0")
+        if temperature is not None or seed is not None:
+            warnings.warn(
+                "engine-level temperature=/seed= are deprecated: pass "
+                "sampling=SamplingParams(...) for an engine default, or "
+                "set Request.sampling per request",
+                DeprecationWarning, stacklevel=2)
+            if sampling is None:
+                sampling = SamplingParams(temperature=temperature or 0.0,
+                                          seed=seed or 0)
+        self.default_sampling = sampling or SamplingParams()
         attn_only = all(k in ATTN_KINDS
                         for k in cfg.block_pattern + cfg.prefix_pattern)
         if prefix_cache and not attn_only:
@@ -105,7 +141,6 @@ class ServingEngine:
             params, cfg, num_slots=num_slots, block_size=block_size,
             num_blocks=num_blocks,
             max_blocks_per_seq=self.max_blocks_per_seq,
-            temperature=temperature, seed=seed,
             prefill_buckets=prefill_buckets,
             prefill_max_batch=prefill_max_batch, speculate=self.speculate)
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
@@ -115,7 +150,7 @@ class ServingEngine:
             max_blocks_per_seq=self.max_blocks_per_seq,
             max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
             now_fn=self._now, speculate=self.speculate, draft=draft,
-            ngram=ngram)
+            ngram=ngram, default_sampling=self.default_sampling)
         self.cache_bytes = self.runner.cache_bytes
         self.steps = 0                # decode+verify iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
@@ -151,24 +186,26 @@ class ServingEngine:
         if self.speculate:
             vb = self.scheduler.prepare_verify()
             if vb is not None:
-                tokens, positions, counts, active, drafts = vb
-                out_tok = self.runner.verify(tokens, positions, counts)
+                tokens, positions, counts, active = vb
+                emit, accept, lp = self.runner.verify(tokens, positions,
+                                                      counts)
                 self.steps += 1
                 self.busy_lane_steps += len(active)
-                self.scheduler.consume_verify(active, drafts, out_tok)
+                self.scheduler.consume_verify(active, emit, accept, lp)
                 return
         batch = self.scheduler.prepare_decode()
         if batch is None:
             return
         tokens, positions, active = batch
-        next_tok = self.runner.decode(tokens, positions)
+        next_tok, lp = self.runner.decode(tokens, positions)
         self.steps += 1
         self.busy_lane_steps += len(active)
-        self.scheduler.consume(active, next_tok)
+        self.scheduler.consume(active, next_tok, lp)
 
-    def run(self, requests: Sequence[Request]) -> List[Completion]:
-        """Drain `requests` (open loop: each enters the queue at its
-        arrival offset on the engine clock) and return completions."""
+    def _drive(self, requests: Sequence[Request]) -> Iterator[None]:
+        """The engine loop as a generator (open loop: each request
+        enters the queue at its arrival offset on the engine clock);
+        yields after every step so `stream` can drain events."""
         pending = sorted(requests, key=lambda r: r.arrival)
         idx = 0
         self._t0 = time.perf_counter()
@@ -187,9 +224,39 @@ class ServingEngine:
                 time.sleep(min(pending[idx].arrival - now, 0.05))
                 continue
             self.step()
+            yield
         self.wall_time = self._now()
+
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        """Drain `requests` and return completions (blocking)."""
+        for _ in self._drive(requests):
+            pass
         done, self.scheduler.completions = self.scheduler.completions, []
         return done
+
+    def stream(self, requests: Sequence[Request]) -> Iterator[StreamEvent]:
+        """Drain `requests`, yielding incremental StreamEvents: new
+        tokens per request as each engine step lands them (several at
+        once under speculation), then a done event carrying the
+        request's Completion. Equivalent token-for-token to `run()`.
+
+        The generator must be consumed to exhaustion: abandoning it
+        mid-stream leaves the undrained requests live in their slots
+        (holding blocks), and a later `run()`/`stream()` on this engine
+        will keep stepping them and fold their Completions into its own
+        results — there is no per-request cancel today."""
+        buf: List[StreamEvent] = []
+        prev = self.scheduler.on_event
+        self.scheduler.on_event = buf.append
+        try:
+            for _ in self._drive(requests):
+                while buf:
+                    yield buf.pop(0)
+            while buf:
+                yield buf.pop(0)
+            self.scheduler.completions = []
+        finally:
+            self.scheduler.on_event = prev
 
 
 # ----------------------------------------------------------------------------
@@ -210,14 +277,25 @@ def _arrivals(rng, n: int, rate: float):
     return np.cumsum(rng.exponential(1.0 / rate, n))
 
 
+def _per_request(sampling: Optional[SamplingParams], i: int):
+    """Stamp request i with its own PRNG stream (seed + i) so sampled
+    workloads stay reproducible AND per-request independent."""
+    if sampling is None:
+        return None
+    return dataclasses.replace(sampling, seed=sampling.seed + i)
+
+
 def synthetic_requests(n: int, *, vocab_size: int,
                        prompt_len: Union[int, Tuple[int, int]] = 64,
                        max_new: tuple = (8, 32), rate: float = float("inf"),
+                       sampling: Optional[SamplingParams] = None,
                        seed: int = 0) -> List[Request]:
     """Open-loop workload: Poisson arrivals at `rate` req/s (inf = all at
     t=0), random prompts, uniform generation lengths in `max_new`.
     `prompt_len` may be an int (fixed) or a (lo, hi) range (mixed-length
-    traffic — exercises the prefill length buckets)."""
+    traffic — exercises the prefill length buckets). `sampling` stamps
+    every request with that config (per-request seeds derived as
+    sampling.seed + i); None leaves requests greedy."""
     rng = np.random.default_rng(seed)
     arrivals = _arrivals(rng, n, rate)
     plens = _sample_lengths(rng, prompt_len, n)
@@ -226,13 +304,15 @@ def synthetic_requests(n: int, *, vocab_size: int,
         rid=i,
         prompt=rng.integers(0, vocab_size, int(plens[i])).astype(np.int32),
         max_new_tokens=int(rng.integers(lo, hi + 1)),
-        arrival=float(arrivals[i])) for i in range(n)]
+        arrival=float(arrivals[i]),
+        sampling=_per_request(sampling, i)) for i in range(n)]
 
 
 def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int = 48,
                            suffix_len: Union[int, Tuple[int, int]] = (4, 16),
                            max_new: tuple = (8, 32), n_prefixes: int = 1,
                            rate: float = float("inf"),
+                           sampling: Optional[SamplingParams] = None,
                            seed: int = 0) -> List[Request]:
     """Shared-prefix workload: every prompt is one of `n_prefixes` common
     system prompts of `prefix_len` tokens followed by a random per-request
@@ -251,7 +331,8 @@ def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int = 48,
             rid=i,
             prompt=np.concatenate([prefixes[i % len(prefixes)], suffix]),
             max_new_tokens=int(rng.integers(lo, hi + 1)),
-            arrival=float(arrivals[i])))
+            arrival=float(arrivals[i]),
+            sampling=_per_request(sampling, i)))
     return out
 
 
@@ -259,6 +340,7 @@ def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
                         prompt_len: Union[int, Tuple[int, int]] = 48,
                         max_new: tuple = (16, 32),
                         rate: float = float("inf"),
+                        sampling: Optional[SamplingParams] = None,
                         seed: int = 0) -> List[Request]:
     """Repetitive-text workload: each prompt tiles a short random
     pattern of `period` tokens — the canonical n-gram (prompt-lookup)
@@ -276,7 +358,8 @@ def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
             rid=i,
             prompt=np.tile(pattern, reps)[:int(plens[i])],
             max_new_tokens=int(rng.integers(lo, hi + 1)),
-            arrival=float(arrivals[i])))
+            arrival=float(arrivals[i]),
+            sampling=_per_request(sampling, i)))
     return out
 
 
@@ -313,6 +396,16 @@ def summarize(completions: Sequence[Completion], wall: float,
                 engine.busy_lane_steps / (engine.steps * engine.num_slots),
                 3)
         sched, runner = engine.scheduler, engine.runner
+        if sched.sampled_requests:
+            # greedy-only records stay byte-identical to pre-sampling
+            # runs: the block appears only when a request sampled
+            stats["sampling"] = {
+                "sampled_requests": sched.sampled_requests,
+                "greedy_requests": sched.greedy_requests,
+                "sampled_dispatches": runner.sampled_dispatches,
+                "stop_finishes": sum(
+                    1 for c in completions if c.finish_reason == "stop"),
+            }
         stats["prefill"] = {
             "dispatches": runner.prefill_dispatches,
             "shapes": len(runner.prefill_shapes),

@@ -2,11 +2,11 @@
 
 The bottom layer of the engine (scheduler -> block manager -> runner).
 It owns everything that touches the device: the paged KV state, the
-device mirror of the block tables, the jitted prefill / decode /
-verify / block-copy callables, and sampling. It knows nothing about
-queues, refcounts, or request lifecycle — the scheduler hands it
-fully-resolved work (token rows, table rows, slot ids) and gets tokens
-back.
+device mirror of the block tables AND of the per-slot sampling configs,
+the jitted prefill / decode / verify / block-copy callables, and
+sampling. It knows nothing about queues, refcounts, or request
+lifecycle — the scheduler hands it fully-resolved work (token rows,
+table rows, slot ids, SamplingParams) and gets tokens back.
 
 Bucketed batched prefill: queued prompts are padded to a small set of
 power-of-two suffix-length buckets and dispatched several at a time
@@ -22,10 +22,23 @@ Bucketed verify (speculative decoding): draft chains are padded to a
 small grid of chain-length buckets (`verify_buckets`, powers of two up
 to speculate+1) and dispatched through `lm.decode_verify_paged` — the
 same trick, so verify compilations are bounded by the bucket grid, not
-by the per-step draft lengths. `verify()` returns the greedy token at
-every chain position; `commit()` then restores each lane's recurrent
-state at its accepted length (attention needs no commit — stale K/V
-past the accepted point is position-masked until overwritten).
+by the per-step draft lengths. `verify()` returns the emitted token and
+accept count at every chain position (greedy compare or Leviathan
+accept/reject — see serving/sampling.py); `commit()` then restores each
+lane's recurrent state at its accepted length (attention needs no
+commit — stale K/V past the accepted point is position-masked until
+overwritten).
+
+Per-request sampling configs are DATA: temperature / top-k / top-p /
+seed ride through every dispatch as (num_slots,) arrays (mirroring the
+block tables), so one compiled instance per shape bucket serves every
+mix of configs, and the compile count never depends on how many
+distinct SamplingParams a workload carries. Each bucket has at most TWO
+traces — an argmax fast path used while every live slot is greedy, and
+the full sampler — so the bound is 2x the bucket grid. Randomness is
+position-keyed per request (fold_in(PRNGKey(seed), pos)); the runner
+holds no sampler state at all, which is what makes a request's stream
+independent of batch composition.
 
 All jitted state is donated, so pools update in place. The bucket-grid
 helpers live in `serving/bucketing.py` (shared with the bench's shape
@@ -34,7 +47,7 @@ assertions).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,11 +55,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serving import kv_cache
+from repro.serving import kv_cache, sampling
 from repro.serving.block_manager import NULL_BLOCK
 from repro.serving.bucketing import (chain_buckets, next_pow2,  # noqa: F401
                                      normalize_buckets, pick_bucket,
                                      width_buckets)
+from repro.serving.sampling import GREEDY, SamplingParams
 
 RECURRENT_KINDS = ("rwkv", "rec")
 
@@ -54,12 +68,13 @@ RECURRENT_KINDS = ("rwkv", "rec")
 @dataclasses.dataclass
 class PrefillRow:
     """One sequence of a prefill batch, fully resolved by the scheduler:
-    suffix tokens to compute, how much of the prompt is cache-hit, and
-    where the results land."""
+    suffix tokens to compute, how much of the prompt is cache-hit, the
+    request's sampling config, and where the results land."""
     tokens: np.ndarray          # (P,) the FULL prompt, int32
     cached_len: int             # prompt tokens already present in blocks
     slot: int                   # decode lane (recurrent state index)
     table_row: np.ndarray       # (max_blocks,) int32, NULL padded
+    sampling: SamplingParams = GREEDY
 
     @property
     def start(self) -> int:     # first computed position
@@ -75,19 +90,12 @@ class ModelRunner:
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  block_size: int, num_blocks: int, max_blocks_per_seq: int,
-                 temperature: float = 0.0, seed: int = 0,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4, speculate: int = 0):
         self.cfg = cfg
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
-        self.temperature = temperature
-        self._key = jax.random.PRNGKey(seed)
-        # greedy dispatches take a CONSTANT key so the compiled trace
-        # never captures sampler state (the live key used to be passed
-        # as a dummy, making greedy dispatch depend on it spuriously)
-        self._greedy_key = jax.random.PRNGKey(0)
         self.state = kv_cache.init_paged_state(cfg, num_slots, num_blocks,
                                                block_size)
         self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size)
@@ -108,6 +116,14 @@ class ModelRunner:
         self._tables_dev = jnp.asarray(self._tables)
         self._tables_dirty = False
 
+        # per-slot sampling configs, the same pattern as the tables:
+        # host arrays of plain data, mirrored to the device lazily
+        self._temps = np.zeros(num_slots, np.float32)
+        self._topks = np.zeros(num_slots, np.int32)
+        self._topps = np.ones(num_slots, np.float32)
+        self._seeds = np.zeros(num_slots, np.int32)
+        self._sampling_dev = None
+
         # telemetry; *_shapes are process-cumulative (compilations
         # persist across runs), the counters are reset per run
         self.prefill_shapes: set = set()     # distinct (width, Ls) dispatched
@@ -115,25 +131,35 @@ class ModelRunner:
         self._snaps = None                   # pending recurrent snapshots
         self.reset_stats()
 
-        def _decode(state, tokens, positions, tables, key):
+        def _decode(state, tokens, positions, tables, temps, topks, topps,
+                    seeds, do_sample):
             logits, state = lm.decode_step_paged(params, cfg, state, tokens,
                                                  positions, tables)
-            if temperature > 0:
-                tok = jax.random.categorical(key, logits / temperature, -1)
+            if do_sample:
+                tok, lp = sampling.sample_tokens(logits, positions, temps,
+                                                 topks, topps, seeds)
             else:
-                tok = jnp.argmax(logits, -1)
-            return tok.astype(jnp.int32), state
+                tok, lp = sampling.greedy_tokens(logits)
+            return tok, lp, state
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(0,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(0,),
+                                  static_argnums=(8,))
 
-        def _verify(state, tokens, positions, counts, tables):
+        def _verify(state, tokens, positions, counts, tables, temps, topks,
+                    topps, seeds, do_sample):
             logits, state, snaps = lm.decode_verify_paged(
                 params, cfg, state, tokens, positions, counts, tables)
-            # speculation is greedy-only (the accept rule compares the
-            # model's argmax against the draft)
-            return jnp.argmax(logits, -1).astype(jnp.int32), state, snaps
+            if do_sample:
+                emit, accept, lp = sampling.verify_tokens(
+                    logits, tokens, counts, positions, temps, topks, topps,
+                    seeds)
+            else:
+                emit, accept, lp = sampling.greedy_verify_tokens(
+                    logits, tokens, counts)
+            return emit, accept, lp, state, snaps
 
-        self._verify_fn = jax.jit(_verify, donate_argnums=(0,))
+        self._verify_fn = jax.jit(_verify, donate_argnums=(0,),
+                                  static_argnums=(9,))
 
         def _commit(state, snaps, idx):
             return lm.commit_decode_state(cfg, state, snaps, idx)
@@ -145,6 +171,14 @@ class ModelRunner:
                                     cached, rows, slots)
 
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(0,))
+
+        def _first(last, positions, temps, topks, topps, seeds, do_sample):
+            if do_sample:
+                return sampling.sample_tokens(last, positions, temps,
+                                              topks, topps, seeds)
+            return sampling.greedy_tokens(last)
+
+        self._first_fn = jax.jit(_first, static_argnums=(6,))
 
         def _copy(state, src, dst):
             return kv_cache.copy_block(cfg, state, src, dst)
@@ -159,6 +193,7 @@ class ModelRunner:
         self.verify_dispatches = 0
         self.verify_padded_tokens = 0        # chain slots incl. padding
         self.verify_chain_tokens = 0         # true chain tokens verified
+        self.sampled_dispatches = 0          # decode/verify full-sampler uses
 
     # ------------------------------------------------------------------
     # block tables
@@ -171,12 +206,45 @@ class ModelRunner:
     def clear_table(self, slot: int) -> None:
         self._tables[slot] = NULL_BLOCK
         self._tables_dirty = True
+        self.clear_sampling(slot)
 
     def _tables_device(self):
         if self._tables_dirty:
             self._tables_dev = jnp.asarray(self._tables)
             self._tables_dirty = False
         return self._tables_dev
+
+    # ------------------------------------------------------------------
+    # per-slot sampling configs
+    # ------------------------------------------------------------------
+
+    def set_sampling(self, slot: int, sp: SamplingParams) -> None:
+        self._temps[slot] = sp.temperature
+        self._topks[slot] = sp.top_k
+        self._topps[slot] = sp.top_p
+        self._seeds[slot] = sampling.seed32(sp.seed)
+        self._sampling_dev = None
+
+    def clear_sampling(self, slot: int) -> None:
+        self._temps[slot] = 0.0
+        self._topks[slot] = 0
+        self._topps[slot] = 1.0
+        self._seeds[slot] = 0
+        self._sampling_dev = None
+
+    @property
+    def any_sampled(self) -> bool:
+        """True while any live slot samples (temperature > 0) — selects
+        the full-sampler trace over the argmax fast path."""
+        return bool(self._temps.max() > 0.0)
+
+    def _sampling_device(self):
+        if self._sampling_dev is None:
+            self._sampling_dev = (jnp.asarray(self._temps),
+                                  jnp.asarray(self._topks),
+                                  jnp.asarray(self._topps),
+                                  jnp.asarray(self._seeds))
+        return self._sampling_dev
 
     # ------------------------------------------------------------------
     # dispatch
@@ -190,10 +258,13 @@ class ModelRunner:
         """Smallest verify bucket covering an n-token draft chain."""
         return pick_bucket(n, self.verify_buckets)
 
-    def prefill(self, rows: List[PrefillRow]) -> np.ndarray:
+    def prefill(self, rows: List[PrefillRow]) -> Tuple[np.ndarray,
+                                                       np.ndarray]:
         """Run one bucketed batched prefill and sample each row's first
-        token from its true-last-position logits. Blocks until done (the
-        caller's TTFT clock covers it). Returns (len(rows),) int32."""
+        token from its true-last-position logits with the row's own
+        SamplingParams (position-keyed on the last prompt position).
+        Blocks until done (the caller's TTFT clock covers it). Returns
+        ((len(rows),) int32 tokens, (len(rows),) float32 logprobs)."""
         n = len(rows)
         ls = self.suffix_bucket(max(r.suffix_len for r in rows))
         width = pick_bucket(n, self.width_buckets)
@@ -203,6 +274,10 @@ class ModelRunner:
         tables = np.full((width, self.max_blocks_per_seq), NULL_BLOCK,
                          np.int32)
         slots = np.full(width, self.num_slots, np.int32)   # pad rows drop
+        temps = np.zeros(width, np.float32)
+        topks = np.zeros(width, np.int32)
+        topps = np.ones(width, np.float32)
+        seeds = np.zeros(width, np.int32)
         for i, r in enumerate(rows):
             suf = r.tokens[r.start:]
             toks[i, :len(suf)] = suf
@@ -210,6 +285,10 @@ class ModelRunner:
             cached[i] = r.cached_len
             tables[i] = r.table_row
             slots[i] = r.slot
+            temps[i] = r.sampling.temperature
+            topks[i] = r.sampling.top_k
+            topps[i] = r.sampling.top_p
+            seeds[i] = sampling.seed32(r.sampling.seed)
         self.prefill_shapes.add((width, ls))
         self.prefill_dispatches += 1
         self.prefill_padded_tokens += width * ls
@@ -218,41 +297,55 @@ class ModelRunner:
         last, self.state = self._prefill_fn(
             self.state, jnp.asarray(toks), jnp.asarray(lengths),
             jnp.asarray(cached), jnp.asarray(tables), jnp.asarray(slots))
-        last = last[:n]
-        if self.temperature > 0:
-            self._key, sub = jax.random.split(self._key)
-            first = jax.random.categorical(sub, last / self.temperature, -1)
-            return np.asarray(first, np.int32)
-        return np.asarray(jnp.argmax(last, -1), np.int32)
+        do_sample = bool(temps.max() > 0.0)
+        first, lp = self._first_fn(
+            last, jnp.asarray(np.maximum(lengths - 1, 0)),
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
+            jnp.asarray(seeds), do_sample)
+        return np.asarray(first, np.int32)[:n], np.asarray(lp,
+                                                           np.float32)[:n]
 
-    def decode(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+    def decode(self, tokens: np.ndarray,
+               positions: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """One batched decode step over all lanes. tokens/positions:
-        (num_slots,) int32 host arrays. Returns sampled (num_slots,)."""
-        if self.temperature > 0:
-            self._key, sub = jax.random.split(self._key)
-        else:
-            sub = self._greedy_key      # constant: greedy trace must not
-        next_tok, self.state = self._decode_fn(  # depend on sampler state
+        (num_slots,) int32 host arrays. Returns ((num_slots,) int32
+        next tokens, (num_slots,) float32 chosen logprobs)."""
+        do_sample = self.any_sampled
+        if do_sample:
+            self.sampled_dispatches += 1
+        temps, topks, topps, seeds = self._sampling_device()
+        next_tok, lp, self.state = self._decode_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
-            self._tables_device(), sub)
-        return np.asarray(next_tok)
+            self._tables_device(), temps, topks, topps, seeds, do_sample)
+        return np.asarray(next_tok), np.asarray(lp)
 
     def verify(self, tokens: np.ndarray, positions: np.ndarray,
-               counts: np.ndarray) -> np.ndarray:
+               counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                            np.ndarray]:
         """One batched multi-token verify dispatch. tokens: (num_slots,
         T) draft chains right-padded to a verify bucket; positions /
         counts: (num_slots,) int32 (counts 0 = lane sits out). Returns
-        the greedy token at every chain position, (num_slots, T) int32.
+        (emitted tokens (num_slots, T) int32 — valid at chain indices
+        0..accept —, accept counts (num_slots,) int32, chosen logprobs
+        (num_slots, T) float32). Greedy lanes emit the model argmax at
+        every position (accept = longest agreeing draft prefix, exactly
+        the bit-identity rule); sampled lanes run Leviathan
+        accept/reject with residual resampling (serving/sampling.py).
         Recurrent snapshots are held until the matching `commit`."""
         T = tokens.shape[1]
         self.verify_shapes.add(T)
         self.verify_dispatches += 1
         self.verify_padded_tokens += tokens.shape[0] * T
         self.verify_chain_tokens += int(counts.sum())
-        out, self.state, self._snaps = self._verify_fn(
+        do_sample = self.any_sampled
+        if do_sample:
+            self.sampled_dispatches += 1
+        temps, topks, topps, seeds = self._sampling_device()
+        emit, accept, lp, self.state, self._snaps = self._verify_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(counts), self._tables_device())
-        return np.asarray(out)
+            jnp.asarray(counts), self._tables_device(), temps, topks,
+            topps, seeds, do_sample)
+        return np.asarray(emit), np.asarray(accept), np.asarray(lp)
 
     def commit(self, idx: np.ndarray) -> None:
         """Commit per-lane recurrent state at `idx` accepted chain

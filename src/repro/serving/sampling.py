@@ -1,0 +1,319 @@
+"""Per-request sampling: `SamplingParams` and the batched samplers.
+
+The serving analog of the paper's minibatch-composition independence:
+every request carries its own decoding configuration (`SamplingParams`)
+and its realization must not depend on which other requests share its
+batch. Two design rules make that hold:
+
+  * configs are DATA, not code — temperature / top-k / top-p / seed
+    ride through the jitted dispatches as (B,) arrays, so one compiled
+    sampler serves every mix of configs (compile count stays bounded by
+    the runner's shape buckets, not by distinct configs), and
+
+  * randomness is position-keyed — the token emitted after consuming
+    sequence position p draws from fold_in(PRNGKey(seed), p) (plus a
+    draw-kind tag), never from engine-global sampler state, so a
+    request's stream is a pure function of (its seed, its positions):
+    bit-identical whether it runs alone or batched with anything else.
+
+`verify_tokens` is the sampling half of speculative decoding
+(Leviathan et al., 2023 accept/reject, specialized to deterministic
+draft proposers such as n-gram lookup): draft token d at position p is
+accepted with probability q(d) — the target (warped) distribution's
+mass on it — and on rejection the correction token is resampled from
+q with d masked out, which preserves the target marginal exactly:
+
+    P(emit x) = q(d)·1[x=d] + (1-q(d)) · q(x)·1[x≠d]/(1-q(d)) = q(x).
+
+Greedy lanes (temperature == 0) bypass all of this with a plain argmax
+compare, so greedy output under speculation stays bit-identical to
+`generate()` — the existing gate. All helpers are pure jnp and safe to
+close over in jitted runner dispatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# draw-kind tags folded into the position key so the accept/reject
+# uniform and the (re)sampling categorical at the same position are
+# independent draws (reusing one key would correlate the rejection
+# event with the correction sample and skew the residual distribution)
+TAG_SAMPLE = 0
+TAG_ACCEPT = 1
+
+
+def _normalize_stop(stop) -> Tuple[Tuple[int, ...], ...]:
+    if stop is None:
+        return ()
+    if isinstance(stop, (int,)):
+        return ((int(stop),),)
+    out = []
+    for s in stop:
+        if isinstance(s, int):
+            out.append((int(s),))
+        else:
+            seq = tuple(int(t) for t in s)
+            if not seq:
+                raise ValueError("empty stop sequence")
+            out.append(seq)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding configuration.
+
+    temperature     0 = greedy (argmax); > 0 samples from the softmax
+    top_k           keep only the k highest logits (0 = disabled)
+    top_p           nucleus sampling: keep the smallest set of tokens
+                    with cumulative probability >= top_p (1.0 = off)
+    seed            per-request PRNG stream; the realization is a pure
+                    function of (seed, position) — batch-independent
+    max_new_tokens  generation cap (the first token comes from prefill)
+    stop            stop token sequences: generation ends when the
+                    OUTPUT ends with any of them (the sequence itself
+                    is kept, like an eos token; matching never spans
+                    into the prompt). An int or a flat int sequence is
+                    treated as a single one-token / one-sequence stop.
+    logprobs        record the chosen token's log-probability under the
+                    RAW model distribution (pre temperature/top-k/top-p)
+                    in Completion.logprobs
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 16
+    stop: Tuple[Tuple[int, ...], ...] = ()
+    logprobs: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "stop", _normalize_stop(self.stop))
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first "
+                             "token is sampled from the prefill logits)")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def with_seed(self, seed: int) -> "SamplingParams":
+        return dataclasses.replace(self, seed=int(seed))
+
+
+GREEDY = SamplingParams()
+
+
+def seed32(seed: int) -> int:
+    """Fold an arbitrary Python int seed into the int32 range the
+    (num_slots,) device seed arrays carry (reinterpreted bits, so
+    distinct 32-bit seeds stay distinct)."""
+    return int(np.uint32(seed & 0xFFFFFFFF).view(np.int32))
+
+
+def resolve(sampling: Optional[SamplingParams],
+            default: Optional[SamplingParams],
+            max_new_tokens: Optional[int] = None,
+            eos_id: Optional[int] = None,
+            rid: int = 0) -> SamplingParams:
+    """Merge a request's SamplingParams with the engine default and the
+    legacy per-request fields (max_new_tokens / eos_id). Explicit
+    request sampling wins over the engine default; legacy max_new_tokens
+    wins over the sampling's cap (old call sites keep their meaning);
+    eos_id becomes one more single-token stop sequence.
+
+    A request that carries NO sampling of its own and falls back to a
+    sampled engine default gets a per-request stream (default.seed +
+    rid) — otherwise every defaulted request would share one seed and
+    identical prompts would sample identical outputs (the old engine-
+    global-key behavior gave them distinct draws; best-of-n over a
+    shared prompt must not collapse to n copies). An EXPLICIT seed is
+    never perturbed: reproducing a specific stream stays possible."""
+    sp = sampling if sampling is not None else (default or GREEDY)
+    changes = {}
+    if sampling is None and not sp.greedy:
+        changes["seed"] = sp.seed + int(rid)
+    if max_new_tokens is not None:
+        changes["max_new_tokens"] = int(max_new_tokens)
+    if eos_id is not None:
+        eos_stop = (int(eos_id),)
+        if eos_stop not in sp.stop:
+            changes["stop"] = sp.stop + (eos_stop,)
+    return dataclasses.replace(sp, **changes) if changes else sp
+
+
+# ----------------------------------------------------------------------------
+# jnp samplers (batched, config-as-data)
+# ----------------------------------------------------------------------------
+
+def position_key(seed, pos, tag):
+    """The key for one draw: fold the absolute sequence position and the
+    draw-kind tag into the request's stream. Pure in (seed, pos, tag)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), pos), tag)
+
+
+def _keys(seeds, positions, tag):
+    """Batched position keys; seeds/positions may be (B,) or (B, T)."""
+    flat = jax.vmap(lambda s, p: position_key(s, p, tag))(
+        seeds.reshape(-1), positions.reshape(-1))
+    return flat.reshape(positions.shape + flat.shape[1:])
+
+
+def warp_logits(logits, temperature, top_k, top_p):
+    """Apply temperature / top-k / top-p to logits (..., V); the scalar
+    params broadcast over the leading dims ((...,)-shaped arrays).
+    softmax(warped) is the target sampling distribution. Masked tokens
+    go to -inf. Greedy rows (temperature 0) are scaled by 1 — callers
+    select argmax for them, the warp result is unused."""
+    V = logits.shape[-1]
+    t = jnp.where(temperature > 0, temperature, 1.0)[..., None]
+    x = logits / t
+    xs = -jnp.sort(-x, axis=-1)                       # descending
+    k = jnp.clip(jnp.where(top_k <= 0, V, top_k), 1, V)
+    kth = jnp.take_along_axis(xs, (k - 1)[..., None], axis=-1)
+    # top-p: softmax is order-preserving, so the nucleus is a prefix of
+    # the SAME descending sort — keep tokens whose cumulative mass
+    # BEFORE them is < p (so the first token is always kept), then
+    # translate back to a logit threshold
+    ps = jax.nn.softmax(xs, axis=-1)
+    keep = (jnp.cumsum(ps, axis=-1) - ps) < top_p[..., None]
+    pth = jnp.min(jnp.where(keep, xs, jnp.inf), axis=-1, keepdims=True)
+    pth = jnp.where((top_p >= 1.0)[..., None], -jnp.inf, pth)
+    thr = jnp.maximum(kth, pth)
+    return jnp.where(x >= thr, x, -jnp.inf)
+
+
+def _categorical(keys, logits):
+    """Per-row-keyed categorical over the last axis; keys/logits share
+    leading dims ((B,) or (B, T))."""
+    flat_keys = keys.reshape((-1,) + keys.shape[len(logits.shape) - 1:])
+    flat_logits = logits.reshape((-1, logits.shape[-1]))
+    tok = jax.vmap(jax.random.categorical)(flat_keys, flat_logits)
+    return tok.reshape(logits.shape[:-1])
+
+
+def _chosen_logprob(logits, tokens):
+    """Log-probability of `tokens` under the RAW model distribution."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(lp, tokens[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+
+
+def greedy_tokens(logits):
+    """Argmax fast path: (tokens, chosen logprobs) for (..., V) logits."""
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return tok, _chosen_logprob(logits, tok)
+
+
+def _shift_draft(chain):
+    """Align the chain with its logits: the draft checked at logits
+    index t is chain token t+1 (the pad column is never a real draft)."""
+    return jnp.concatenate(
+        [chain[:, 1:], jnp.zeros_like(chain[:, :1])], axis=1)
+
+
+def _lead_accepts(acc, counts):
+    """Number of leading accepted drafts per lane: only the first
+    counts-1 chain positions carry real drafts, and the run stops at
+    the first rejection."""
+    T = acc.shape[1]
+    valid = jnp.arange(T, dtype=jnp.int32)[None, :] < counts[:, None] - 1
+    return jnp.cumprod((acc & valid).astype(jnp.int32),
+                       axis=1).sum(axis=1).astype(jnp.int32)
+
+
+def greedy_verify_tokens(logits, chain, counts):
+    """The argmax accept rule for a whole verify dispatch (the fast
+    path when every live slot is greedy — ONE definition shared with
+    the greedy lanes inside `verify_tokens`, so the two traces cannot
+    drift): emit the model argmax at every position and accept the
+    longest draft prefix agreeing with it. Returns (emit (B, T) int32,
+    accept (B,) int32, chosen logprobs (B, T) float32)."""
+    model_tok, lp = greedy_tokens(logits)
+    accept = _lead_accepts(model_tok == _shift_draft(chain), counts)
+    return model_tok, accept, lp
+
+
+def sample_tokens(logits, positions, temperature, top_k, top_p, seeds):
+    """One batched next-token draw with per-lane configs.
+
+    logits (B, V); positions (B,) absolute position of the token each
+    lane just consumed (the key for this draw); temperature/top_p (B,)
+    float, top_k/seeds (B,) int. Greedy lanes take the argmax; sampled
+    lanes draw categorical(fold_in(PRNGKey(seed), pos)) over the warped
+    logits. Returns ((B,) int32 tokens, (B,) float32 chosen logprobs)."""
+    warped = warp_logits(logits, temperature, top_k, top_p)
+    sampled = _categorical(_keys(seeds, positions, TAG_SAMPLE), warped)
+    tok = jnp.where(temperature > 0, sampled,
+                    jnp.argmax(logits, axis=-1)).astype(jnp.int32)
+    return tok, _chosen_logprob(logits, tok)
+
+
+def verify_tokens(logits, chain, counts, positions, temperature, top_k,
+                  top_p, seeds):
+    """Accept/reject + emission for one verify dispatch (the sampling
+    half of speculative decoding, deterministic-draft specialization).
+
+    logits (B, T, V): next-token logits after consuming chain token t;
+    chain (B, T): [pending, d_1 .. d_k] right-padded; counts (B,) true
+    chain lengths (0 = lane sits out); positions (B,) absolute position
+    of each chain's first token; temperature/top_k/top_p/seeds (B,).
+
+    Per lane, draft d_{t+1} (checked against logits index t) is:
+      greedy lane   accepted iff argmax(logits[t]) == d_{t+1}
+      sampled lane  accepted with probability q_t(d_{t+1}) where q_t =
+                    softmax(warp(logits[t])) — the Leviathan rule with a
+                    deterministic (probability-one) proposal
+    `accept` is the number of leading accepted drafts; the emitted run
+    is the accepted drafts plus ONE more token at index `accept`:
+      greedy         the model argmax (correction == bonus)
+      sampled, a<k   resampled from q_a with the rejected draft masked
+                     out (the residual distribution)
+      sampled, a==k  the bonus token, a plain draw from q_k
+    Accept uniforms and (re)samples use different key tags, so the
+    marginal of the emitted token at every position is exactly q — the
+    distribution-preservation property the tiny-vocab test pins.
+
+    Returns (emit (B, T) int32 — valid at indices 0..accept —,
+    accept (B,) int32, chosen logprobs (B, T) float32)."""
+    B, T = chain.shape
+    tidx = jnp.arange(T, dtype=jnp.int32)[None, :]
+    pos = positions[:, None] + tidx                         # (B, T)
+    seeds_bt = jnp.broadcast_to(seeds[:, None], (B, T))
+    model_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    draft = _shift_draft(chain)
+    warped = warp_logits(logits, temperature[:, None], top_k[:, None],
+                         top_p[:, None])
+    q_draft = jnp.exp(jnp.take_along_axis(
+        jax.nn.log_softmax(warped, axis=-1), draft[..., None],
+        axis=-1)[..., 0])
+    u = jax.vmap(jax.vmap(jax.random.uniform))(
+        _keys(seeds_bt, pos, TAG_ACCEPT))
+    accept = _lead_accepts(
+        jnp.where(temperature[:, None] > 0, u < q_draft,
+                  model_tok == draft), counts)
+    skeys = _keys(seeds_bt, pos, TAG_SAMPLE)
+    residual = jnp.where(
+        jax.nn.one_hot(draft, logits.shape[-1], dtype=bool), -jnp.inf,
+        warped)
+    resample = _categorical(skeys, residual)      # rejection correction
+    bonus = _categorical(skeys, warped)           # full-accept bonus
+    full = (accept >= jnp.maximum(counts, 1) - 1)[:, None]
+    emit_sampled = jnp.where(tidx < accept[:, None], draft,
+                             jnp.where(full, bonus, resample))
+    emit = jnp.where(temperature[:, None] > 0, emit_sampled,
+                     model_tok).astype(jnp.int32)
+    return emit, accept.astype(jnp.int32), _chosen_logprob(logits, emit)

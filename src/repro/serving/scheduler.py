@@ -1,9 +1,23 @@
-"""Scheduler: queue, admission policy, request lifecycle, eviction,
-and the propose/accept/rollback half of speculative decoding.
+"""Scheduler: queue, admission policy, request lifecycle, unified stop
+handling, eviction, and the propose/accept/rollback half of
+speculative decoding.
 
 The top layer of the serving engine (scheduler -> block manager ->
 runner). It owns every request-level decision and no device state:
 
+  * per-request SamplingParams — `submit` resolves each request's
+    sampling config (request sampling > engine default, legacy
+    max_new_tokens / eos_id folded in), tracks it per slot, and hands
+    it to the runner as data (the runner mirrors it to the device as
+    (num_slots,) arrays, so batches freely mix greedy, sampled, and
+    speculative-sampled lanes in ONE dispatch).
+  * unified stop handling — eos and multi-token stop sequences are one
+    code path: a resolved list of stop token sequences per slot,
+    scanned over the generated output after every emission (matching
+    never spans into the prompt). A stop landing mid-speculative-chain
+    truncates the accepted run at the stop and rolls the rest back —
+    recurrent state commits at the truncated length and the chain's
+    unused block claims are freed.
   * FCFS queue with bucketed batch formation — admission picks the
     oldest waiting request, peeks its prefix-cache match to find its
     suffix-length bucket, then collects further queued requests that
@@ -29,14 +43,17 @@ runner). It owns every request-level decision and no device state:
     (serving/draft.py) over its prompt + generated history.
     `prepare_verify` assembles per-lane draft chains [pending, d1..dk],
     claims the blocks the chain would write, and pads to the runner's
-    verify bucket; `consume_verify` accepts the longest agreeing draft
-    prefix plus the one token the model produced anyway, commits
-    recurrent state at the accepted length through the runner, and
-    frees exactly the blocks a rejected suffix had claimed (the
-    allocator returns to its pre-draft state — property-tested).
-  * lifecycle + eviction — finished sequences (max_new_tokens or eos)
-    are evicted: their table row is nulled, their lane freed, every
-    block reference dropped, and their unclaimed budget released.
+    verify bucket; `consume_verify` takes the runner's emitted tokens
+    and accept counts (greedy compare or Leviathan accept/reject — see
+    serving/sampling.py), commits recurrent state at the accepted (and
+    stop-truncated) length through the runner, and frees exactly the
+    blocks a rejected suffix had claimed (the allocator returns to its
+    pre-draft state — property-tested).
+  * lifecycle + eviction + streaming — finished sequences
+    (max_new_tokens or a stop hit) are evicted: their table row is
+    nulled, their lane freed, every block reference dropped, and their
+    unclaimed budget released. Every emission and completion fires the
+    optional `on_event` callback (the engine's `stream()` source).
 """
 from __future__ import annotations
 
@@ -50,15 +67,22 @@ from repro.serving.block_manager import (NULL_BLOCK, BlockAllocator,
                                          PrefixMatch)
 from repro.serving.draft import make_proposer
 from repro.serving.runner import ModelRunner, PrefillRow
+from repro.serving.sampling import SamplingParams, resolve
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request. `sampling` carries the decoding config;
+    `max_new_tokens` / `eos_id` are the legacy per-request fields and
+    stay honored (merged into the resolved SamplingParams at submit —
+    the resolved config is written back to `sampling`, and
+    `max_new_tokens` is back-filled, so both views agree downstream)."""
     rid: int
     prompt: np.ndarray            # (P,) int32 token ids
-    max_new_tokens: int
+    max_new_tokens: Optional[int] = None
     arrival: float = 0.0          # seconds on the engine clock (open loop)
     eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
 
 
 @dataclasses.dataclass
@@ -71,11 +95,28 @@ class Completion:
     t_first_token: float
     t_done: float
     cached_tokens: int = 0        # prompt tokens served from the prefix cache
+    finish_reason: str = "length"  # 'length' | 'stop'
+    logprobs: Optional[np.ndarray] = None   # (n_generated,) float32 if
+    #                               SamplingParams.logprobs was requested
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One increment of a streaming completion: `tokens` newly emitted
+    for `rid` (several at once under speculation), then a final event
+    with done=True carrying the Completion (and no new tokens)."""
+    rid: int
+    tokens: List[int]
+    logprobs: Optional[List[float]] = None
+    done: bool = False
+    completion: Optional[Completion] = None
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
+    sp: SamplingParams            # resolved sampling config
+    stops: List[List[int]]        # resolved stop token sequences
     table_row: np.ndarray         # (max_blocks,) int32, NULL padded
     pos: int                      # position of the next token to feed
     pending: int                  # token to feed at `pos`
@@ -89,13 +130,8 @@ class _Slot:
     budget: int                   # reserved-but-unbound blocks remaining
     cow_block: Optional[int]      # reserved private copy for the shared
     cow_index: int = -1           # first-divergent block (lazy COW)
-
-    def emit(self, tokens: List[int]) -> None:
-        """Append generated tokens to the output AND the proposer
-        history in one place — the two views must never desynchronize
-        (hist == prompt + out is the proposer's input invariant)."""
-        self.out.extend(tokens)
-        self.hist.extend(tokens)
+    lps: Optional[List[float]] = None   # chosen-token logprobs if asked
+    stopped: bool = False         # a stop sequence completed
 
 
 @dataclasses.dataclass
@@ -125,7 +161,8 @@ class Scheduler:
                  num_slots: int, block_size: int, max_blocks_per_seq: int,
                  max_seq_len: int, prefix_cache: bool,
                  now_fn: Callable[[], float], speculate: int = 0,
-                 draft: str = "ngram", ngram: int = 3):
+                 draft: str = "ngram", ngram: int = 3,
+                 default_sampling: Optional[SamplingParams] = None):
         self.allocator = allocator
         self.runner = runner
         self.num_slots = num_slots
@@ -135,6 +172,7 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         self._now = now_fn
         self.speculate = max(0, speculate)
+        self.default_sampling = default_sampling or SamplingParams()
         # one proposer per lane: drafting is per-sequence state-free
         # today (n-gram lookup), but the ownership point is the seam a
         # stateful draft-model proposer will need
@@ -144,6 +182,7 @@ class Scheduler:
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._reserved_budget = 0     # sum of live slots' budgets
         self.completions: List[Completion] = []
+        self.on_event: Optional[Callable[[StreamEvent], None]] = None
         self.reset_stats()
 
     def reset_stats(self) -> None:
@@ -152,21 +191,32 @@ class Scheduler:
         self.prefix_hit_requests = 0
         self.proposed_tokens = 0      # draft tokens sent to verify
         self.accepted_tokens = 0      # draft tokens accepted
+        self.greedy_requests = 0      # submitted with temperature == 0
+        self.sampled_requests = 0     # submitted with temperature > 0
 
     # ------------------------------------------------------------------
     # queue
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1 (the "
-                f"first token is sampled from the prefill logits)")
-        if len(req.prompt) + req.max_new_tokens > self.max_seq_len:
+        """Validate, resolve the request's SamplingParams (request >
+        engine default, legacy max_new_tokens/eos_id merged in), and
+        enqueue. The resolved config is written back onto the request
+        so every later stage reads one authoritative view."""
+        sp = resolve(req.sampling, self.default_sampling,
+                     max_new_tokens=req.max_new_tokens, eos_id=req.eos_id,
+                     rid=req.rid)
+        req.sampling = sp
+        req.max_new_tokens = sp.max_new_tokens
+        if len(req.prompt) + sp.max_new_tokens > self.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new "
-                f"{len(req.prompt) + req.max_new_tokens} exceeds "
+                f"{len(req.prompt) + sp.max_new_tokens} exceeds "
                 f"max_seq_len {self.max_seq_len}")
+        if sp.greedy:
+            self.greedy_requests += 1
+        else:
+            self.sampled_requests += 1
         self._queue.append(req)
 
     @property
@@ -192,7 +242,7 @@ class Scheduler:
         table row. Returns None (nothing held) if the pool is short."""
         P = len(req.prompt)
         bs = self.block_size
-        total = -(-(P + req.max_new_tokens) // bs)
+        total = -(-(P + req.sampling.max_new_tokens) // bs)
         n_prompt = -(-P // bs)
         budget = total - n_prompt
         f = len(match.full_blocks)
@@ -279,24 +329,74 @@ class Scheduler:
     def _dispatch(self, plans: List[_Plan]) -> None:
         rows = [PrefillRow(tokens=np.asarray(p.req.prompt, np.int32),
                            cached_len=p.cached, slot=p.slot,
-                           table_row=p.table_row) for p in plans]
-        first = self.runner.prefill(rows)   # blocks: TTFT covers it
+                           table_row=p.table_row,
+                           sampling=p.req.sampling) for p in plans]
+        first, lp = self.runner.prefill(rows)   # blocks: TTFT covers it
         t_first = self._now()
-        for p, tok in zip(plans, first):
+        for p, tok, tok_lp in zip(plans, first, lp):
             P = len(p.req.prompt)
+            sp = p.req.sampling
             if self.prefix_cache:
                 self.allocator.register_prefix(
                     p.req.prompt, [int(b) for b in p.table_row])
             self.runner.write_table(p.slot, p.table_row)
-            self._slots[p.slot] = _Slot(
-                req=p.req, table_row=p.table_row, pos=P, pending=int(tok),
-                out=[int(tok)],
-                hist=[int(t) for t in p.req.prompt] + [int(tok)],
+            self.runner.set_sampling(p.slot, sp)
+            stops = [list(s) for s in sp.stop]
+            s = _Slot(
+                req=p.req, sp=sp, stops=stops, table_row=p.table_row,
+                pos=P, pending=int(tok), out=[],
+                hist=[int(t) for t in p.req.prompt],
                 t_admit=p.t_admit, t_first=t_first, cached=p.cached,
                 n_blocks=p.n_blocks, prompt_blocks=p.n_blocks,
                 budget=p.budget, cow_block=p.cow_block,
-                cow_index=p.cow_index)
+                cow_index=p.cow_index,
+                lps=[] if sp.logprobs else None)
+            self._slots[p.slot] = s
+            if self._stop_cut(s, [int(tok)]) is not None:
+                s.stopped = True
+            self._emit(s, [int(tok)], [float(tok_lp)])
             self._maybe_finish(p.slot)
+
+    # ------------------------------------------------------------------
+    # emission + unified stop handling (eos == a one-token stop seq)
+    # ------------------------------------------------------------------
+
+    def _emit(self, s: _Slot, tokens: List[int],
+              lps: Optional[List[float]] = None) -> None:
+        """Append generated tokens to the output AND the proposer
+        history in one place (hist == prompt + out is the proposer's
+        input invariant), record logprobs if the request asked, and
+        fire the streaming callback."""
+        s.out.extend(tokens)
+        s.hist.extend(tokens)
+        if s.lps is not None and lps is not None:
+            s.lps.extend(lps)
+        if self.on_event is not None:
+            self.on_event(StreamEvent(
+                rid=s.req.rid, tokens=list(tokens),
+                logprobs=list(lps) if (s.lps is not None and lps) else None))
+
+    def _stop_cut(self, s: _Slot, new_tokens: List[int]) -> Optional[int]:
+        """Earliest 1-based index into `new_tokens` at which a stop
+        sequence completes, scanning the GENERATED output only (s.out,
+        not yet extended, plus the candidate tokens); None if no stop
+        fires. Stop sequences may span previously emitted tokens and
+        the new chunk, but never reach into the prompt."""
+        if not s.stops:
+            return None
+        longest = max(len(ss) for ss in s.stops)
+        # the last (longest-1) already-emitted tokens are the only old
+        # context a newly-completing stop can reach back into
+        tail = s.out[-(longest - 1):] if longest > 1 else []
+        window = tail + list(new_tokens)
+        base = len(tail)
+        for j in range(1, len(new_tokens) + 1):
+            end = base + j
+            for ss in s.stops:
+                L = len(ss)
+                if L <= len(s.out) + j and window[end - L:end] == ss:
+                    return j
+        return None
 
     # ------------------------------------------------------------------
     # incremental block claim / release (the draft reservation)
@@ -378,14 +478,19 @@ class Scheduler:
             positions[i] = s.pos
         return tokens, positions, active
 
-    def consume(self, active: List[int], next_tok: np.ndarray) -> None:
+    def consume(self, active: List[int], next_tok: np.ndarray,
+                lp: Optional[np.ndarray] = None) -> None:
         """Advance each active lane with its sampled token; finish and
-        evict lanes that hit max_new_tokens or eos."""
+        evict lanes that hit max_new_tokens or a stop sequence."""
         for i in active:
             s = self._slots[i]
+            tok = int(next_tok[i])
             s.pos += 1
-            s.pending = int(next_tok[i])
-            s.emit([s.pending])
+            s.pending = tok
+            if self._stop_cut(s, [tok]) is not None:
+                s.stopped = True
+            self._emit(s, [tok],
+                       [float(lp[i])] if lp is not None else None)
             self._maybe_finish(i)
 
     # ------------------------------------------------------------------
@@ -397,9 +502,9 @@ class Scheduler:
         [pending, d_1 .. d_k] (k from each lane's proposer, capped so
         the chain can never emit past max_new_tokens), claim the blocks
         each chain would write, and pad to the runner's chain bucket.
-        Returns (tokens (num_slots, T), positions, counts, active,
-        drafts) — or None when no lane proposed anything, so the engine
-        falls back to the plain decode dispatch at zero overhead."""
+        Returns (tokens (num_slots, T), positions, counts, active) — or
+        None when no lane proposed anything, so the engine falls back
+        to the plain decode dispatch at zero overhead."""
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return None
@@ -407,7 +512,7 @@ class Scheduler:
         max_chain = 1
         for i in active:
             s = self._slots[i]
-            k = min(self.speculate, s.req.max_new_tokens - len(s.out) - 1)
+            k = min(self.speculate, s.sp.max_new_tokens - len(s.out) - 1)
             d = self._proposers[i].propose(s.hist, k) if k > 0 else []
             # clamp: the propose(history, k) seam must not let an
             # over-eager proposer overflow the chain bucket, emit past
@@ -429,40 +534,50 @@ class Scheduler:
             positions[i] = s.pos
             counts[i] = len(chain)
             self.proposed_tokens += len(drafts[i])
-        return tokens, positions, counts, active, drafts
+        return tokens, positions, counts, active
 
-    def consume_verify(self, active: List[int], drafts: Dict[int, List[int]],
-                       out_tok: np.ndarray) -> None:
+    def consume_verify(self, active: List[int], out_tok: np.ndarray,
+                       accept: np.ndarray,
+                       lp: Optional[np.ndarray] = None) -> None:
         """Accept/rollback after a verify dispatch. out_tok: (num_slots,
-        T) greedy tokens at every chain position. Per lane: accept the
-        longest prefix of the draft that agrees with the model plus the
-        one bonus token, commit recurrent state at the accepted length,
-        free the blocks a rejected suffix claimed, advance, and finish
-        lanes that hit max_new_tokens or eos (the emitted run is cut at
-        the first eos)."""
+        T) emitted tokens at every chain position (model argmax for
+        greedy lanes; accepted drafts + the residual-resampled
+        correction or bonus for sampled lanes); accept: (num_slots,)
+        accepted draft counts, both computed on-device. Per lane: take
+        the accepted run plus the one correction/bonus token, truncate
+        it at the first completed stop sequence, commit recurrent state
+        at the truncated length through the runner, free the blocks a
+        rejected (or stop-cut) suffix claimed, advance, and finish
+        lanes that hit max_new_tokens or a stop."""
         commit_idx = np.zeros(self.num_slots, np.int32)
-        accepted: Dict[int, int] = {}
-        for i in active:
-            d = drafts[i]
-            a = 0
-            while a < len(d) and int(out_tok[i, a]) == d[a]:
-                a += 1
-            accepted[i] = a
-            commit_idx[i] = a + 1         # chain tokens consumed
-        # restore recurrent slot state at each lane's accepted length
-        # BEFORE host bookkeeping (no-op for pure-attention archs)
-        self.runner.commit(commit_idx)
+        plan: Dict[int, tuple] = {}
         for i in active:
             s = self._slots[i]
-            a = accepted[i]
+            a = int(accept[i])
             emitted = [int(out_tok[i, t]) for t in range(a + 1)]
-            if s.req.eos_id is not None and s.req.eos_id in emitted:
-                emitted = emitted[:emitted.index(s.req.eos_id) + 1]
+            lps = ([float(lp[i, t]) for t in range(a + 1)]
+                   if lp is not None else None)
+            cut = self._stop_cut(s, emitted)
+            if cut is not None:
+                emitted = emitted[:cut]
+                if lps is not None:
+                    lps = lps[:cut]
+            plan[i] = (emitted, lps, cut is not None)
+            commit_idx[i] = len(emitted)
             # accepted = drafts that actually materialized as output
-            # (drafts agreeing past a truncating eos don't count)
+            # (drafts agreeing past a truncating stop don't count)
             self.accepted_tokens += len(emitted) - 1
-            s.emit(emitted)
-            s.pos += a + 1
+        # restore recurrent slot state at each lane's accepted
+        # (stop-truncated) length BEFORE host bookkeeping (a no-op for
+        # pure-attention archs)
+        self.runner.commit(commit_idx)
+        for i in active:
+            emitted, lps, stopped = plan[i]
+            s = self._slots[i]
+            if stopped:
+                s.stopped = True
+            self._emit(s, emitted, lps)
+            s.pos += len(emitted)
             s.pending = emitted[-1]
             # rejected suffix: free exactly the blocks it claimed
             self._trim_blocks(i, s.pos - 1)
@@ -474,17 +589,19 @@ class Scheduler:
 
     def _maybe_finish(self, slot_id: int) -> None:
         s = self._slots[slot_id]
-        done = (len(s.out) >= s.req.max_new_tokens
-                or (s.req.eos_id is not None and s.out
-                    and s.out[-1] == s.req.eos_id))
+        done = s.stopped or len(s.out) >= s.sp.max_new_tokens
         if not done:
             return
-        self.completions.append(Completion(
+        completion = Completion(
             rid=s.req.rid, prompt_len=len(s.req.prompt),
             tokens=np.asarray(s.out, np.int32), arrival=s.req.arrival,
             t_admit=s.t_admit, t_first_token=s.t_first,
-            t_done=self._now(), cached_tokens=min(s.cached,
-                                                  len(s.req.prompt) - 1)))
+            t_done=self._now(),
+            cached_tokens=min(s.cached, len(s.req.prompt) - 1),
+            finish_reason="stop" if s.stopped else "length",
+            logprobs=(np.asarray(s.lps, np.float32)
+                      if s.lps is not None else None))
+        self.completions.append(completion)
         for b in s.table_row:
             if b != NULL_BLOCK:
                 self.allocator.decref(int(b))
@@ -493,3 +610,6 @@ class Scheduler:
         self._reserved_budget -= s.budget
         self.runner.clear_table(slot_id)
         self._slots[slot_id] = None
+        if self.on_event is not None:
+            self.on_event(StreamEvent(rid=completion.rid, tokens=[],
+                                      done=True, completion=completion))

@@ -319,8 +319,12 @@ def test_engine_speculative_eos_mid_chain():
 def test_engine_verify_shapes_bounded_and_flags():
     cfg = get_config("smollm-135m").reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    with pytest.raises(ValueError):
-        ServingEngine(params, cfg, speculate=4, temperature=0.7)
+    # speculation + temperature used to hard-error (greedy-only); it is
+    # now a legal combination (distribution-preserving accept/reject),
+    # and the engine-wide temperature knob survives as a deprecated shim
+    with pytest.warns(DeprecationWarning):
+        ServingEngine(params, cfg, num_slots=2, block_size=4,
+                      max_seq_len=32, speculate=4, temperature=0.7)
     reqs = repetitive_requests(8, vocab_size=cfg.vocab_size, period=4,
                                prompt_len=(12, 30), max_new=(4, 18),
                                seed=5)
@@ -361,10 +365,15 @@ class _FakeRunner:
         return pick_bucket(n, self.verify_buckets)
 
     def prefill(self, rows):
-        return np.full(len(rows), 1, np.int32)
+        return (np.full(len(rows), 1, np.int32),
+                np.zeros(len(rows), np.float32))
 
     def verify(self, tokens, positions, counts):
-        return np.full(tokens.shape, -1, np.int32)   # rejects everything
+        # rejects everything: the emitted correction disagrees with
+        # every draft and zero drafts are accepted
+        return (np.full(tokens.shape, -1, np.int32),
+                np.zeros(tokens.shape[0], np.int32),
+                np.zeros(tokens.shape, np.float32))
 
     def commit(self, idx):
         pass
@@ -376,6 +385,12 @@ class _FakeRunner:
         pass
 
     def clear_table(self, slot):
+        pass
+
+    def set_sampling(self, slot, sp):
+        pass
+
+    def clear_sampling(self, slot):
         pass
 
 
@@ -450,10 +465,11 @@ def test_full_rejection_through_the_real_verify_path():
         "propose": staticmethod(lambda hist, k: [3] * min(k, 6))})()] * 2
     batch = sched.prepare_verify()
     assert batch is not None
-    tokens, positions, counts, active, drafts = batch
+    tokens, positions, counts, active = batch
     assert s.n_blocks > pre_blocks                    # chain claimed blocks
     out_tok = np.full(tokens.shape, -1, np.int32)     # model disagrees
-    sched.consume_verify(active, drafts, out_tok)
+    accept = np.zeros(tokens.shape[0], np.int32)
+    sched.consume_verify(active, out_tok, accept)
     assert s.pos == pos0 + 1 and len(s.out) == out0 + 1
     # the one committed write may have crossed into the chain's first
     # claimed block; everything past it went back
