@@ -17,8 +17,22 @@ Workloads (--workload):
   shared-prefix  common system prompt + short per-request suffix — runs
                  the engine with the prefix cache ON and OFF and records
                  computed vs cached prefill tokens for both
+  multi-tenant   --tenants distinct shared prefixes, interleaved
+                 arrivals — the workload that separates prefix-affinity
+                 routing from round-robin
   repetitive     short token pattern tiled through each prompt — the
                  n-gram speculation scenario
+
+With --replicas N (> 1) the record gains CLUSTER arms: the same
+workload through a Router over N full replica engine stacks, once per
+placement policy (round-robin / least-loaded / prefix-affinity). Every
+cluster arm is gated on BIT-IDENTITY to the corresponding
+single-replica engine run — greedy, sampled (--temperature), and
+speculative (--speculate) — because per-request realizations are
+batch-composition independent, placement must never change output. The
+record also logs per-policy placement counts and cluster-wide
+cached-prompt-token totals (on multi-tenant traffic, prefix-affinity
+must cache-skip strictly more than round-robin — the smoke gate).
 
 With --speculate K a second engine arm runs with n-gram speculative
 decoding; the record adds acceptance rate and tokens-per-dispatch, and
@@ -63,9 +77,12 @@ from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
 from repro.serving.bucketing import pick_bucket
-from repro.serving.engine import (ServingEngine, repetitive_requests,
+from repro.serving.engine import (ServingEngine, multi_tenant_requests,
+                                  repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.replica import Replica
+from repro.serving.router import POLICIES, Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -106,6 +123,12 @@ def _make_requests(args, cfg, sampling=None):
             prefix_len=args.prefix_len,
             suffix_len=tuple(args.suffix_len), max_new=tuple(args.max_new),
             n_prefixes=args.n_prefixes, sampling=sampling, seed=args.seed)
+    if args.workload == "multi-tenant":
+        return multi_tenant_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            n_tenants=args.tenants, prefix_len=args.prefix_len,
+            suffix_len=tuple(args.suffix_len), max_new=tuple(args.max_new),
+            sampling=sampling, seed=args.seed)
     plen = (args.prompt_len[0] if len(args.prompt_len) == 1
             else tuple(args.prompt_len))
     if args.workload == "repetitive":
@@ -120,10 +143,23 @@ def _make_requests(args, cfg, sampling=None):
                               sampling=sampling, seed=args.seed)
 
 
+def _pool_blocks(args, max_seq):
+    """Block-pool size: None (the engine's slots-only default) except on
+    multi-tenant traffic, where the pool gets headroom to keep every
+    tenant's prefix resident — without it the cached-free pool thrashes
+    and the policy comparison measures eviction noise, not routing."""
+    if args.workload != "multi-tenant":
+        return None
+    per_seq = -(-max_seq // args.block_size)
+    per_prefix = -(-args.prefix_len // args.block_size)
+    return 1 + args.slots * per_seq + args.tenants * per_prefix
+
+
 def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache,
                     speculate: int = 0):
     engine = ServingEngine(params, cfg, num_slots=args.slots,
                            block_size=args.block_size, max_seq_len=max_seq,
+                           num_blocks=_pool_blocks(args, max_seq),
                            prefix_cache=prefix_cache,
                            prefill_max_batch=args.prefill_batch,
                            speculate=speculate, draft=args.draft,
@@ -131,6 +167,43 @@ def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache,
     engine.run(reqs)                  # warm up jit on the workload shapes
     engine.reset_prefix_cache()       # measured pass starts cache-cold
     return run_engine(engine, reqs), engine
+
+
+def _cluster_replicas(params, cfg, args, max_seq, speculate=0):
+    return [Replica(params, cfg, replica_id=i, num_slots=args.slots,
+                    block_size=args.block_size, max_seq_len=max_seq,
+                    num_blocks=_pool_blocks(args, max_seq),
+                    prefill_max_batch=args.prefill_batch,
+                    speculate=speculate, draft=args.draft,
+                    ngram=args.ngram)
+            for i in range(args.replicas)]
+
+
+def _measure_cluster(replicas, reqs, policy):
+    """One measured cluster pass: fresh Router, a warm pass under THIS
+    policy first (each policy's placement reaches its own set of
+    prefill shapes — warming with another policy would leave compiles
+    inside the first measured arm's wall), then prefix caches reset so
+    every policy's measured pass starts cache-cold (the cache-skip
+    comparison must not inherit warm blocks)."""
+    router = Router(replicas, policy=policy)
+    for rep in replicas:
+        rep.reset_prefix_cache()
+    router.run(list(reqs))                # jit warm under this policy
+    for rep in replicas:
+        rep.reset_prefix_cache()
+    done = router.run(list(reqs))
+    return done, router
+
+
+def _cluster_identical(done, ref_done) -> bool:
+    """The cluster correctness gate: every completion bit-identical to
+    the same request's single-replica-run output (a duplicated or
+    dropped rid is a failure, not a crash)."""
+    ref = {c.rid: c.tokens for c in ref_done}
+    if {c.rid for c in done} != set(ref) or len(done) != len(ref):
+        return False
+    return all(np.array_equal(ref[c.rid], c.tokens) for c in done)
 
 
 def _check_identity(params, cfg, reqs, done) -> bool:
@@ -168,14 +241,22 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--workload", default="uniform",
                     choices=["uniform", "mixed", "shared-prefix",
-                             "repetitive"])
+                             "multi-tenant", "repetitive"])
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, nargs="+", default=[256])
     ap.add_argument("--prefix-len", type=int, default=192,
-                    help="shared system-prompt length (shared-prefix)")
+                    help="shared system-prompt length (shared-prefix / "
+                         "multi-tenant)")
     ap.add_argument("--suffix-len", type=int, nargs=2, default=(8, 64),
-                    help="per-request suffix range (shared-prefix)")
+                    help="per-request suffix range (shared-prefix / "
+                         "multi-tenant)")
     ap.add_argument("--n-prefixes", type=int, default=1)
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="distinct shared prefixes (multi-tenant)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 adds router cluster arms (one per "
+                         "placement policy) gated on bit-identity to "
+                         "the single-replica run")
     ap.add_argument("--period", type=int, default=6,
                     help="repeated-pattern length (repetitive)")
     ap.add_argument("--max-new", type=int, nargs=2, default=(4, 32))
@@ -198,7 +279,27 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args(argv)
 
-    if args.smoke:
+    if args.smoke and args.replicas > 1:
+        # the 2-replica router gate: multi-tenant traffic (the workload
+        # that separates prefix-affinity from round-robin), small
+        # replicas so placement outlives the blind warm-up phase, and
+        # sampled + speculative arms so every cluster identity gate runs
+        args.workload = "multi-tenant"
+        args.requests = min(args.requests, 16)
+        args.tenants = 3
+        args.prefix_len = 16
+        args.suffix_len = (2, 6)
+        args.max_new = (4, 8)
+        args.slots = min(args.slots, 2)
+        args.block_size = min(args.block_size, 4)
+        args.prefill_batch = min(args.prefill_batch, 2)
+        if args.speculate == 0:
+            args.speculate = 2
+        if args.temperature == 0.0:
+            args.temperature = 0.8
+        if args.top_k == 0:
+            args.top_k = 2
+    elif args.smoke:
         # the acceptance-rate gate is only meaningful where n-gram
         # lookup can hit — pin the workload the gate is defined on
         args.workload = "repetitive"
@@ -227,8 +328,10 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     run_baseline(params, cfg, reqs, args.slots)
     base_tok, base_s = run_baseline(params, cfg, reqs, args.slots)
 
-    (eng_tok, eng_s, eng_stats, _), _ = _measure_engine(
+    (eng_tok, eng_s, eng_stats, eng_done), _ = _measure_engine(
         params, cfg, args, reqs, max_seq, prefix_cache=None)
+    sp_done = sm_done = None          # single-replica spec / sampled
+    sreqs = None                      # outputs (cluster identity refs)
 
     base_tps = base_tok / base_s
     eng_tps = eng_tok / eng_s
@@ -282,7 +385,10 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         print(f"spec_greedy_identical,{identical},")
         if args.smoke:
             assert identical, "speculation changed greedy output"
-            assert sp["acceptance_rate"] > 0, "no draft token accepted"
+            if args.workload == "repetitive":
+                # the acceptance gate is defined on repetitive traffic;
+                # on other smoke workloads n-gram lookup may never hit
+                assert sp["acceptance_rate"] > 0, "no draft accepted"
             assert shapes_ok and bucket_ok, "verify shapes escaped grid"
     if args.temperature > 0:
         base_sp = SamplingParams(temperature=args.temperature,
@@ -320,10 +426,65 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         record["sampling_gate"] = gate
         if args.smoke:
             assert invariant, "sampled output depends on batch composition"
-            assert gate.get("spec_sampled_acceptance", 1) > 0, \
-                "speculative sampling accepted no draft"
+            if args.workload == "repetitive":
+                assert gate.get("spec_sampled_acceptance", 1) > 0, \
+                    "speculative sampling accepted no draft"
             assert gate.get("spec_sampled_batch_invariant", True), \
                 "spec-sampled output depends on batch composition"
+    if args.replicas > 1:
+        # -------------------- cluster arms ---------------------------
+        # the same workload through a Router over N replica stacks,
+        # once per policy; every arm gated on bit-identity to the
+        # single-replica run above (greedy / sampled / speculative)
+        cluster = {"replicas": args.replicas, "arms": {}}
+        reps = _cluster_replicas(params, cfg, args, max_seq)
+        reps_spec = None
+        if args.speculate > 0:
+            reps_spec = _cluster_replicas(params, cfg, args, max_seq,
+                                          speculate=args.speculate)
+        for policy in POLICIES:
+            done_c, router = _measure_cluster(reps, reqs, policy)
+            cs = summarize_cluster(done_c, router.wall_time, router)
+            arm = {
+                "tokens_per_s": cs["tokens_per_s"],
+                "placed": cs["cluster"]["placed"],
+                "prompt_tokens": cs["cluster"]["prompt_tokens"],
+                "cached_prompt_tokens":
+                    cs["cluster"]["cached_prompt_tokens"],
+                "greedy_identical": _cluster_identical(done_c, eng_done),
+            }
+            if sm_done is not None:
+                sdone, _ = _measure_cluster(reps, sreqs, policy)
+                arm["sampled_identical"] = _cluster_identical(sdone,
+                                                              sm_done)
+            if sp_done is not None:
+                pdone, _ = _measure_cluster(reps_spec, reqs, policy)
+                arm["spec_identical"] = _cluster_identical(pdone, sp_done)
+            cluster["arms"][policy] = arm
+            ident = all(v for k, v in arm.items() if k.endswith("identical"))
+            print(f"cluster_{policy}_tok_s,{arm['tokens_per_s']},"
+                  f"{args.replicas} replicas")
+            print(f"cluster_{policy}_cached_tokens,"
+                  f"{arm['cached_prompt_tokens']},"
+                  f"of {arm['prompt_tokens']} prompt tokens "
+                  f"(placed {arm['placed']})")
+            print(f"cluster_{policy}_identical,{ident},"
+                  f"vs single-replica run (all arms)")
+        record["cluster"] = cluster
+        arms = cluster["arms"]
+        affinity_gap = (arms["prefix-affinity"]["cached_prompt_tokens"]
+                        - arms["round-robin"]["cached_prompt_tokens"])
+        cluster["affinity_cached_tokens_over_rr"] = affinity_gap
+        print(f"cluster_affinity_cached_over_rr,{affinity_gap},"
+              f"prefix-affinity cache-skips vs round-robin")
+        if args.smoke:
+            for policy, arm in arms.items():
+                for key in ("greedy_identical", "sampled_identical",
+                            "spec_identical"):
+                    assert arm.get(key, True), \
+                        f"{policy} cluster {key} gate failed"
+            assert affinity_gap > 0, \
+                "prefix-affinity did not out-cache round-robin"
     print(f"serving_baseline_tok_s,{base_tps:.1f},")
     print(f"serving_engine_tok_s,{eng_tps:.1f},")
     print(f"serving_speedup,{record['speedup']:.2f},x over token-by-token")

@@ -9,7 +9,14 @@
 #                              # bit-identical to generate(), and —
 #                              # sampled-speculation gates — sampled
 #                              # acceptance > 0 + batch-composition
-#                              # invariance of sampled outputs)
+#                              # invariance of sampled outputs) + the
+#                              # 2-replica router smoke (fixed seed,
+#                              # multi-tenant workload; asserts every
+#                              # cluster arm — greedy / sampled / spec,
+#                              # all three policies — bit-identical to
+#                              # the 1-replica run, and that
+#                              # prefix-affinity cache-skips strictly
+#                              # more prompt tokens than round-robin)
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -19,8 +26,11 @@ case "${1:-fast}" in
   full)    shift;         exec python -m pytest -x -q "$@" ;;
   serving) shift
            python -m pytest -x -q -m serving "$@"
-           exec python benchmarks/serving_bench.py --workload repetitive \
+           python benchmarks/serving_bench.py --workload repetitive \
                 --smoke --seed 0 --temperature 0.8 --top-k 2 \
+                --out "$(mktemp -d)"
+           exec python benchmarks/serving_bench.py \
+                --workload multi-tenant --smoke --replicas 2 --seed 0 \
                 --out "$(mktemp -d)" ;;
   *)                      exec python -m pytest -x -q "$@" ;;
 esac

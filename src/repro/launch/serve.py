@@ -21,6 +21,13 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --temperature 0.8 \
         --top-k 50 --top-p 0.95 --stop 7 11 --speculate 4
 
+    # multi-replica cluster: a router fronting N full engine stacks
+    # (per-replica device pools + prefix caches) with least-loaded or
+    # prefix-affinity placement; outputs are bit-identical to a
+    # single-replica run (batch-composition independence, one level up):
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
+        --router prefix --workload multi-tenant --tenants 4
+
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
     PYTHONPATH=src python -m repro.launch.serve --mode naive --batch 4
@@ -44,9 +51,12 @@ from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serving.engine import (Request, ServingEngine,
+                                  multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.replica import Replica
+from repro.serving.router import Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
 
 
@@ -98,45 +108,69 @@ def _prompt_len_spec(values):
 
 def _sampling_from_args(args):
     """Per-workload SamplingParams from the CLI flags; None (greedy,
-    no stops) when every flag sits at its default."""
+    no stops, no logprobs) when every flag sits at its default."""
     stop = (tuple(args.stop),) if args.stop else ()
     if (args.temperature <= 0 and args.top_k == 0 and args.top_p >= 1.0
-            and not stop):
+            and not stop and args.logprobs == 0):
         return None
     return SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                          top_p=args.top_p, seed=args.seed, stop=stop)
+                          top_p=args.top_p, seed=args.seed, stop=stop,
+                          logprobs=args.logprobs)
 
 
-def _run_engine(args, cfg, params):
+def _make_workload(args, cfg):
     rate = float("inf") if args.rate <= 0 else args.rate
     plen = _prompt_len_spec(args.prompt_len)
     sampling = _sampling_from_args(args)
     if args.workload == "shared-prefix":
-        reqs = shared_prefix_requests(
+        return shared_prefix_requests(
             args.requests, vocab_size=cfg.vocab_size,
             prefix_len=args.prefix_len, suffix_len=plen,
             max_new=tuple(args.max_new), n_prefixes=args.n_prefixes,
             rate=rate, sampling=sampling, seed=args.seed)
-    elif args.workload == "repetitive":
-        reqs = repetitive_requests(
+    if args.workload == "multi-tenant":
+        return multi_tenant_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            n_tenants=args.tenants, prefix_len=args.prefix_len,
+            suffix_len=plen, max_new=tuple(args.max_new), rate=rate,
+            sampling=sampling, seed=args.seed)
+    if args.workload == "repetitive":
+        return repetitive_requests(
             args.requests, vocab_size=cfg.vocab_size, period=args.period,
             prompt_len=plen, max_new=tuple(args.max_new), rate=rate,
             sampling=sampling, seed=args.seed)
-    else:
-        reqs = synthetic_requests(
-            args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
-            max_new=tuple(args.max_new), rate=rate, sampling=sampling,
-            seed=args.seed)
+    return synthetic_requests(
+        args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
+        max_new=tuple(args.max_new), rate=rate, sampling=sampling,
+        seed=args.seed)
+
+
+def _engine_kwargs(args, max_seq_len):
+    return dict(num_slots=args.slots, block_size=args.block_size,
+                max_seq_len=max_seq_len, prefix_cache=args.prefix_cache,
+                prefill_buckets=args.prefill_buckets,
+                prefill_max_batch=args.prefill_batch,
+                speculate=args.speculate, draft=args.draft,
+                ngram=args.ngram,
+                # widen the compiled top-k side output when the CLI asks
+                # for more alternatives than the engine default carries
+                max_logprobs=max(args.logprobs, 8))
+
+
+def _run_engine(args, cfg, params):
+    reqs = _make_workload(args, cfg)
     max_prompt = max(len(r.prompt) for r in reqs)
-    engine = ServingEngine(
-        params, cfg, num_slots=args.slots, block_size=args.block_size,
-        max_seq_len=max_prompt + max(args.max_new) + 1,
-        prefix_cache=args.prefix_cache,
-        prefill_buckets=args.prefill_buckets,
-        prefill_max_batch=args.prefill_batch,
-        speculate=args.speculate, draft=args.draft, ngram=args.ngram)
-    done = engine.run(reqs)
-    stats = summarize(done, engine.wall_time, engine)
+    kwargs = _engine_kwargs(args, max_prompt + max(args.max_new) + 1)
+    if args.replicas > 1:
+        replicas = [Replica(params, cfg, replica_id=i, **kwargs)
+                    for i in range(args.replicas)]
+        router = Router(replicas, policy=args.router)
+        done = router.run(reqs)
+        stats = summarize_cluster(done, router.wall_time, router)
+    else:
+        engine = ServingEngine(params, cfg, **kwargs)
+        done = engine.run(reqs)
+        stats = summarize(done, engine.wall_time, engine)
     print(json.dumps(stats, indent=1))
     if done:
         sample = min(done, key=lambda c: c.rid)
@@ -178,11 +212,25 @@ def main():
     ap.add_argument("--max-new", type=int, nargs=2, default=(8, 32),
                     metavar=("LO", "HI"))
     ap.add_argument("--workload", default="synthetic",
-                    choices=["synthetic", "shared-prefix", "repetitive"])
+                    choices=["synthetic", "shared-prefix", "multi-tenant",
+                             "repetitive"])
     ap.add_argument("--prefix-len", type=int, default=48,
-                    help="shared system-prompt length (shared-prefix)")
+                    help="shared system-prompt length (shared-prefix / "
+                         "multi-tenant)")
     ap.add_argument("--n-prefixes", type=int, default=1,
                     help="distinct system prompts (shared-prefix)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="distinct tenants, each with its own shared "
+                         "prefix, interleaved arrivals (multi-tenant)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="model replicas behind the cluster router "
+                         "(each a full engine stack; 1 = no router)")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=["rr", "least-loaded", "prefix"],
+                    help="replica placement policy: round-robin, "
+                         "least-loaded (slot+queue occupancy), or "
+                         "prefix-affinity (BlockAllocator match_prefix "
+                         "probe)")
     ap.add_argument("--period", type=int, default=6,
                     help="repeated-pattern length (repetitive)")
     ap.add_argument("--speculate", type=int, default=0,
@@ -213,6 +261,9 @@ def main():
     ap.add_argument("--stop", type=int, nargs="+", default=None,
                     help="stop token sequence: generation ends when the "
                          "output ends with these ids")
+    ap.add_argument("--logprobs", type=int, default=0,
+                    help="record the chosen token's logprob plus the "
+                         "top-k alternatives per position (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -30,22 +30,40 @@ sampled lanes run Leviathan accept/reject with residual resampling
 (target distribution preserved exactly); rejected drafts roll back
 (positions for attention, snapshots for recurrent state, block claims
 for the allocator).
+
+Above the engine sits the CLUSTER layer (`replica.py` / `router.py`):
+`Replica` wraps one full engine stack (its own device pools, prefix
+cache, everything replica-local) behind occupancy/affinity probes, and
+`Router` fronts a cluster-wide queue with pluggable placement —
+round-robin, least-loaded (slot+queue occupancy), prefix-affinity (the
+BlockAllocator `match_prefix` content-hash probe) — plus backpressure,
+sticky placement, drain/failover, and cluster-level run()/stream()
+that merge per-replica streams. Outputs are bit-identical to a
+single-replica run for every policy and replica count (the
+batch-composition-independence guarantee, one level up).
 """
 from repro.serving.block_manager import BlockAllocator, PrefixMatch
 from repro.serving.bucketing import next_pow2, pick_bucket, pow2_buckets
 from repro.serving.draft import NGramProposer, make_proposer
 from repro.serving.engine import (Completion, Request, ServingEngine,
+                                  multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
 from repro.serving.kv_cache import init_paged_state
+from repro.serving.replica import Replica, ReplicaSnapshot
+from repro.serving.router import (POLICIES, Router, normalize_policy,
+                                  summarize_cluster)
 from repro.serving.runner import ModelRunner
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Scheduler, StreamEvent
+from repro.serving.scheduler import Scheduler, SchedulerStats, StreamEvent
 
 __all__ = ["ServingEngine", "Request", "Completion", "SamplingParams",
-           "StreamEvent", "synthetic_requests",
-           "shared_prefix_requests", "repetitive_requests", "summarize",
+           "StreamEvent", "SchedulerStats", "synthetic_requests",
+           "shared_prefix_requests", "repetitive_requests",
+           "multi_tenant_requests", "summarize",
+           "Replica", "ReplicaSnapshot", "Router", "POLICIES",
+           "normalize_policy", "summarize_cluster",
            "BlockAllocator", "PrefixMatch", "ModelRunner", "Scheduler",
            "init_paged_state", "NGramProposer", "make_proposer",
            "next_pow2", "pick_bucket", "pow2_buckets"]

@@ -106,6 +106,13 @@ class BlockAllocator:
     def num_cached(self) -> int:
         return len(self._cached)
 
+    @property
+    def num_indexed(self) -> int:
+        """Blocks currently published in the prefix index (live shared
+        blocks + cached-free ones) — how much reusable prefix the pool
+        holds, the telemetry behind the router's affinity signal."""
+        return len(self._key)
+
     def refcount(self, block: int) -> int:
         return self._ref.get(block, 0)
 

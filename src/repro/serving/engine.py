@@ -65,7 +65,7 @@ from repro.serving.kv_cache import ATTN_KINDS
 from repro.serving.runner import ModelRunner
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (Completion, Request, Scheduler,
-                                     StreamEvent)
+                                     SchedulerStats, StreamEvent)
 
 
 class ServingEngine:
@@ -89,6 +89,9 @@ class ServingEngine:
                        distribution-preserving accept/reject
     draft              draft proposer kind ('ngram': prompt lookup)
     ngram              longest n-gram the proposer tries to match
+    max_logprobs       static top-k width compiled for the alternative-
+                       logprob side output (SamplingParams.logprobs=k
+                       must have k <= this)
 
     temperature / seed are DEPRECATED engine-wide knobs, kept as a
     back-compat shim: they map to a default SamplingParams (with a
@@ -104,7 +107,8 @@ class ServingEngine:
                  prefix_cache: Optional[bool] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4, speculate: int = 0,
-                 draft: str = "ngram", ngram: int = 3):
+                 draft: str = "ngram", ngram: int = 3,
+                 max_logprobs: int = 8):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "serving engine currently supports text LMs only")
@@ -142,7 +146,8 @@ class ServingEngine:
             num_blocks=num_blocks,
             max_blocks_per_seq=self.max_blocks_per_seq,
             prefill_buckets=prefill_buckets,
-            prefill_max_batch=prefill_max_batch, speculate=self.speculate)
+            prefill_max_batch=prefill_max_batch, speculate=self.speculate,
+            max_logprobs=max_logprobs)
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
         self.scheduler = Scheduler(
             self.allocator, self.runner, num_slots=num_slots,
@@ -166,10 +171,28 @@ class ServingEngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
+    def stats(self) -> SchedulerStats:
+        """Structured occupancy snapshot (queue depth, slot occupancy,
+        allocator free/cached block counts) — what a replica router
+        reads to place load."""
+        return self.scheduler.stats()
+
     def _now(self) -> float:
         """Seconds on the engine clock (fresh reading — timestamps must be
         taken AFTER the blocking device work they account for)."""
         return time.perf_counter() - self._t0
+
+    def begin_run(self, t0: Optional[float] = None) -> None:
+        """Reset the engine clock and per-run telemetry counters. `t0`
+        (a time.perf_counter reading) lets a cluster router give every
+        replica one shared clock origin so timestamps are comparable
+        across replicas; None starts the clock now."""
+        self._t0 = time.perf_counter() if t0 is None else t0
+        self.steps = 0
+        self.busy_lane_steps = 0
+        self.scheduler.reset_stats()      # telemetry is per run
+        self.runner.reset_stats()
+        self.allocator.cache_evictions = 0
 
     def reset_prefix_cache(self) -> None:
         """Drop cached prompt blocks (e.g. between benchmark runs)."""
@@ -187,20 +210,21 @@ class ServingEngine:
             vb = self.scheduler.prepare_verify()
             if vb is not None:
                 tokens, positions, counts, active = vb
-                emit, accept, lp = self.runner.verify(tokens, positions,
-                                                      counts)
+                emit, accept, lp, alt = self.runner.verify(
+                    tokens, positions, counts)
                 self.steps += 1
                 self.busy_lane_steps += len(active)
-                self.scheduler.consume_verify(active, emit, accept, lp)
+                self.scheduler.consume_verify(active, emit, accept, lp,
+                                              alt)
                 return
         batch = self.scheduler.prepare_decode()
         if batch is None:
             return
         tokens, positions, active = batch
-        next_tok, lp = self.runner.decode(tokens, positions)
+        next_tok, lp, alt = self.runner.decode(tokens, positions)
         self.steps += 1
         self.busy_lane_steps += len(active)
-        self.scheduler.consume(active, next_tok, lp)
+        self.scheduler.consume(active, next_tok, lp, alt)
 
     def _drive(self, requests: Sequence[Request]) -> Iterator[None]:
         """The engine loop as a generator (open loop: each request
@@ -208,12 +232,7 @@ class ServingEngine:
         yields after every step so `stream` can drain events."""
         pending = sorted(requests, key=lambda r: r.arrival)
         idx = 0
-        self._t0 = time.perf_counter()
-        self.steps = 0
-        self.busy_lane_steps = 0
-        self.scheduler.reset_stats()      # telemetry is per run
-        self.runner.reset_stats()
-        self.allocator.cache_evictions = 0
+        self.begin_run()
         while idx < len(pending) or self.has_work:
             now = self._now()
             while idx < len(pending) and pending[idx].arrival <= now:
@@ -336,6 +355,44 @@ def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int = 48,
     return out
 
 
+def multi_tenant_requests(n: int, *, vocab_size: int, n_tenants: int = 4,
+                          prefix_len: Union[int, Tuple[int, int]] = 48,
+                          suffix_len: Union[int, Tuple[int, int]] = (4, 16),
+                          max_new: tuple = (8, 32),
+                          rate: float = float("inf"),
+                          sampling: Optional[SamplingParams] = None,
+                          seed: int = 0) -> List[Request]:
+    """Multi-tenant workload: `n_tenants` distinct shared system prompts
+    (tenants), each request drawn to a random tenant so tenant traffic
+    INTERLEAVES, followed by a random per-request suffix. `prefix_len`
+    may be an int or a (lo, hi) range (per-tenant prompt lengths — lands
+    tenants in different prefill buckets).
+
+    This is the workload that separates prefix-affinity routing from
+    round-robin: every tenant's prefix is cacheable, but only on
+    replicas that already served that tenant — an affinity router pins
+    each tenant to the replica holding its blocks, while round-robin
+    re-prefills each tenant's prefix once per replica it touches."""
+    rng = np.random.default_rng(seed)
+    plens = _sample_lengths(rng, prefix_len, max(n_tenants, 1))
+    prefixes = [rng.integers(0, vocab_size, int(p)).astype(np.int32)
+                for p in plens]
+    tenants = rng.integers(0, len(prefixes), n)
+    arrivals = _arrivals(rng, n, rate)
+    slens = _sample_lengths(rng, suffix_len, n)
+    lo, hi = max_new
+    out = []
+    for i in range(n):
+        suffix = rng.integers(0, vocab_size, int(slens[i])).astype(np.int32)
+        out.append(Request(
+            rid=i,
+            prompt=np.concatenate([prefixes[int(tenants[i])], suffix]),
+            max_new_tokens=int(rng.integers(lo, hi + 1)),
+            arrival=float(arrivals[i]),
+            sampling=_per_request(sampling, i)))
+    return out
+
+
 def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
                         prompt_len: Union[int, Tuple[int, int]] = 48,
                         max_new: tuple = (16, 32),
@@ -416,11 +473,14 @@ def summarize(completions: Sequence[Completion], wall: float,
             "cached_tokens": sched.cached_prompt_tokens,
             "padded_tokens": runner.prefill_padded_tokens,
         }
+        snap = engine.stats()             # structured occupancy accessor
         stats["prefix_cache"] = {
             "enabled": engine.prefix_cache,
             "hit_requests": sched.prefix_hit_requests,
             "block_copies": runner.block_copies,
             "evictions": engine.allocator.cache_evictions,
+            # blocks still holding reusable prefix KV after the run
+            "warm_blocks": snap.cached_blocks,
         }
         if engine.speculate:
             dispatches = engine.steps      # decode + verify iterations

@@ -33,9 +33,11 @@ Per-request sampling configs are DATA: temperature / top-k / top-p /
 seed ride through every dispatch as (num_slots,) arrays (mirroring the
 block tables), so one compiled instance per shape bucket serves every
 mix of configs, and the compile count never depends on how many
-distinct SamplingParams a workload carries. Each bucket has at most TWO
-traces — an argmax fast path used while every live slot is greedy, and
-the full sampler — so the bound is 2x the bucket grid. Randomness is
+distinct SamplingParams a workload carries. Each bucket has at most
+FOUR traces — {argmax fast path, full sampler} x {with, without the
+top-`max_logprobs` alternative-logprob side output} — so the bound is
+4x the bucket grid (2x while no request asks for logprobs). Randomness
+is
 position-keyed per request (fold_in(PRNGKey(seed), pos)); the runner
 holds no sampler state at all, which is what makes a request's stream
 independent of batch composition.
@@ -91,7 +93,8 @@ class ModelRunner:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  block_size: int, num_blocks: int, max_blocks_per_seq: int,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 prefill_max_batch: int = 4, speculate: int = 0):
+                 prefill_max_batch: int = 4, speculate: int = 0,
+                 max_logprobs: int = 8):
         self.cfg = cfg
         self.num_slots = num_slots
         self.block_size = block_size
@@ -122,7 +125,12 @@ class ModelRunner:
         self._topks = np.zeros(num_slots, np.int32)
         self._topps = np.ones(num_slots, np.float32)
         self._seeds = np.zeros(num_slots, np.int32)
+        self._wantk = np.zeros(num_slots, np.int32)   # requested logprob k
         self._sampling_dev = None
+        # static top-k width of the alternative-logprob side output (one
+        # compiled width serves every per-request k <= max_logprobs; the
+        # scheduler slices each request's k columns host-side)
+        self.max_logprobs = max(1, min(max_logprobs, cfg.vocab_size))
 
         # telemetry; *_shapes are process-cumulative (compilations
         # persist across runs), the counters are reset per run
@@ -131,8 +139,10 @@ class ModelRunner:
         self._snaps = None                   # pending recurrent snapshots
         self.reset_stats()
 
+        K = self.max_logprobs
+
         def _decode(state, tokens, positions, tables, temps, topks, topps,
-                    seeds, do_sample):
+                    seeds, do_sample, want_alt):
             logits, state = lm.decode_step_paged(params, cfg, state, tokens,
                                                  positions, tables)
             if do_sample:
@@ -140,13 +150,14 @@ class ModelRunner:
                                                  topks, topps, seeds)
             else:
                 tok, lp = sampling.greedy_tokens(logits)
-            return tok, lp, state
+            alt = sampling.top_alternatives(logits, K) if want_alt else None
+            return tok, lp, alt, state
 
         self._decode_fn = jax.jit(_decode, donate_argnums=(0,),
-                                  static_argnums=(8,))
+                                  static_argnums=(8, 9))
 
         def _verify(state, tokens, positions, counts, tables, temps, topks,
-                    topps, seeds, do_sample):
+                    topps, seeds, do_sample, want_alt):
             logits, state, snaps = lm.decode_verify_paged(
                 params, cfg, state, tokens, positions, counts, tables)
             if do_sample:
@@ -156,10 +167,11 @@ class ModelRunner:
             else:
                 emit, accept, lp = sampling.greedy_verify_tokens(
                     logits, tokens, counts)
-            return emit, accept, lp, state, snaps
+            alt = sampling.top_alternatives(logits, K) if want_alt else None
+            return emit, accept, lp, alt, state, snaps
 
         self._verify_fn = jax.jit(_verify, donate_argnums=(0,),
-                                  static_argnums=(9,))
+                                  static_argnums=(9, 10))
 
         def _commit(state, snaps, idx):
             return lm.commit_decode_state(cfg, state, snaps, idx)
@@ -172,13 +184,17 @@ class ModelRunner:
 
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(0,))
 
-        def _first(last, positions, temps, topks, topps, seeds, do_sample):
+        def _first(last, positions, temps, topks, topps, seeds, do_sample,
+                   want_alt):
             if do_sample:
-                return sampling.sample_tokens(last, positions, temps,
-                                              topks, topps, seeds)
-            return sampling.greedy_tokens(last)
+                tok, lp = sampling.sample_tokens(last, positions, temps,
+                                                 topks, topps, seeds)
+            else:
+                tok, lp = sampling.greedy_tokens(last)
+            alt = sampling.top_alternatives(last, K) if want_alt else None
+            return tok, lp, alt
 
-        self._first_fn = jax.jit(_first, static_argnums=(6,))
+        self._first_fn = jax.jit(_first, static_argnums=(6, 7))
 
         def _copy(state, src, dst):
             return kv_cache.copy_block(cfg, state, src, dst)
@@ -223,6 +239,7 @@ class ModelRunner:
         self._topks[slot] = sp.top_k
         self._topps[slot] = sp.top_p
         self._seeds[slot] = sampling.seed32(sp.seed)
+        self._wantk[slot] = min(sp.logprobs, self.max_logprobs)
         self._sampling_dev = None
 
     def clear_sampling(self, slot: int) -> None:
@@ -230,6 +247,7 @@ class ModelRunner:
         self._topks[slot] = 0
         self._topps[slot] = 1.0
         self._seeds[slot] = 0
+        self._wantk[slot] = 0
         self._sampling_dev = None
 
     @property
@@ -237,6 +255,12 @@ class ModelRunner:
         """True while any live slot samples (temperature > 0) — selects
         the full-sampler trace over the argmax fast path."""
         return bool(self._temps.max() > 0.0)
+
+    @property
+    def any_alt(self) -> bool:
+        """True while any live slot asked for alternative logprobs —
+        selects the trace with the top-k side output."""
+        return bool(self._wantk.max() > 0)
 
     def _sampling_device(self):
         if self._sampling_dev is None:
@@ -258,13 +282,16 @@ class ModelRunner:
         """Smallest verify bucket covering an n-token draft chain."""
         return pick_bucket(n, self.verify_buckets)
 
-    def prefill(self, rows: List[PrefillRow]) -> Tuple[np.ndarray,
-                                                       np.ndarray]:
+    def prefill(self, rows: List[PrefillRow]):
         """Run one bucketed batched prefill and sample each row's first
         token from its true-last-position logits with the row's own
         SamplingParams (position-keyed on the last prompt position).
         Blocks until done (the caller's TTFT clock covers it). Returns
-        ((len(rows),) int32 tokens, (len(rows),) float32 logprobs)."""
+        ((len(rows),) int32 tokens, (len(rows),) float32 logprobs,
+        alt) where alt is None unless a row asked for logprobs — then
+        ((len(rows), max_logprobs) int32 ids, (..., max_logprobs)
+        float32 logprobs) of the top alternatives at each row's last
+        prompt position."""
         n = len(rows)
         ls = self.suffix_bucket(max(r.suffix_len for r in rows))
         width = pick_bucket(n, self.width_buckets)
@@ -298,36 +325,49 @@ class ModelRunner:
             self.state, jnp.asarray(toks), jnp.asarray(lengths),
             jnp.asarray(cached), jnp.asarray(tables), jnp.asarray(slots))
         do_sample = bool(temps.max() > 0.0)
-        first, lp = self._first_fn(
+        want_alt = any(r.sampling.logprobs for r in rows)
+        first, lp, alt = self._first_fn(
             last, jnp.asarray(np.maximum(lengths - 1, 0)),
             jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
-            jnp.asarray(seeds), do_sample)
-        return np.asarray(first, np.int32)[:n], np.asarray(lp,
-                                                           np.float32)[:n]
+            jnp.asarray(seeds), do_sample, want_alt)
+        return (np.asarray(first, np.int32)[:n],
+                np.asarray(lp, np.float32)[:n], self._host_alt(alt, n))
 
-    def decode(self, tokens: np.ndarray,
-               positions: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    @staticmethod
+    def _host_alt(alt, n: Optional[int] = None):
+        if alt is None:
+            return None
+        ids, lps = alt
+        ids = np.asarray(ids, np.int32)
+        lps = np.asarray(lps, np.float32)
+        return (ids[:n], lps[:n]) if n is not None else (ids, lps)
+
+    def decode(self, tokens: np.ndarray, positions: np.ndarray):
         """One batched decode step over all lanes. tokens/positions:
         (num_slots,) int32 host arrays. Returns ((num_slots,) int32
-        next tokens, (num_slots,) float32 chosen logprobs)."""
+        next tokens, (num_slots,) float32 chosen logprobs, alt — None
+        or the top-max_logprobs ((num_slots, K) ids, (num_slots, K)
+        logprobs) when any live slot asked for alternatives)."""
         do_sample = self.any_sampled
         if do_sample:
             self.sampled_dispatches += 1
         temps, topks, topps, seeds = self._sampling_device()
-        next_tok, lp, self.state = self._decode_fn(
+        next_tok, lp, alt, self.state = self._decode_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
-            self._tables_device(), temps, topks, topps, seeds, do_sample)
-        return np.asarray(next_tok), np.asarray(lp)
+            self._tables_device(), temps, topks, topps, seeds, do_sample,
+            self.any_alt)
+        return np.asarray(next_tok), np.asarray(lp), self._host_alt(alt)
 
     def verify(self, tokens: np.ndarray, positions: np.ndarray,
-               counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
-                                            np.ndarray]:
+               counts: np.ndarray):
         """One batched multi-token verify dispatch. tokens: (num_slots,
         T) draft chains right-padded to a verify bucket; positions /
         counts: (num_slots,) int32 (counts 0 = lane sits out). Returns
         (emitted tokens (num_slots, T) int32 — valid at chain indices
         0..accept —, accept counts (num_slots,) int32, chosen logprobs
-        (num_slots, T) float32). Greedy lanes emit the model argmax at
+        (num_slots, T) float32, alt — None or the per-position
+        top-max_logprobs ((num_slots, T, K) ids, (num_slots, T, K)
+        logprobs)). Greedy lanes emit the model argmax at
         every position (accept = longest agreeing draft prefix, exactly
         the bit-identity rule); sampled lanes run Leviathan
         accept/reject with residual resampling (serving/sampling.py).
@@ -341,11 +381,12 @@ class ModelRunner:
         if do_sample:
             self.sampled_dispatches += 1
         temps, topks, topps, seeds = self._sampling_device()
-        emit, accept, lp, self.state, self._snaps = self._verify_fn(
+        emit, accept, lp, alt, self.state, self._snaps = self._verify_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(counts), self._tables_device(), temps, topks,
-            topps, seeds, do_sample)
-        return np.asarray(emit), np.asarray(accept), np.asarray(lp)
+            topps, seeds, do_sample, self.any_alt)
+        return (np.asarray(emit), np.asarray(accept), np.asarray(lp),
+                self._host_alt(alt))
 
     def commit(self, idx: np.ndarray) -> None:
         """Commit per-lane recurrent state at `idx` accepted chain

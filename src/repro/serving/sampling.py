@@ -80,9 +80,15 @@ class SamplingParams:
                     is kept, like an eos token; matching never spans
                     into the prompt). An int or a flat int sequence is
                     treated as a single one-token / one-sequence stop.
-    logprobs        record the chosen token's log-probability under the
-                    RAW model distribution (pre temperature/top-k/top-p)
-                    in Completion.logprobs
+    logprobs        0 (off) or k >= 1: record the chosen token's
+                    log-probability in Completion.logprobs AND the top-k
+                    alternative tokens' (ids, logprobs) per emitted
+                    position in Completion.top_ids / top_logprobs — all
+                    under the RAW model distribution (pre temperature /
+                    top-k / top-p), through the decode AND the
+                    speculative verify path. True is accepted as 1
+                    (back-compat). k is capped by the runner's
+                    max_logprobs (the static top-k width it compiles).
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -90,10 +96,13 @@ class SamplingParams:
     seed: int = 0
     max_new_tokens: int = 16
     stop: Tuple[Tuple[int, ...], ...] = ()
-    logprobs: bool = False
+    logprobs: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "stop", _normalize_stop(self.stop))
+        object.__setattr__(self, "logprobs", int(self.logprobs))
+        if self.logprobs < 0:
+            raise ValueError(f"logprobs must be >= 0, got {self.logprobs}")
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0, "
                              f"got {self.temperature}")
@@ -216,6 +225,16 @@ def greedy_tokens(logits):
     """Argmax fast path: (tokens, chosen logprobs) for (..., V) logits."""
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return tok, _chosen_logprob(logits, tok)
+
+
+def top_alternatives(logits, k: int):
+    """Top-k alternative tokens per position under the RAW model
+    distribution: ((..., k) int32 ids, (..., k) float32 logprobs),
+    descending. `k` is static (a compile-time width); requests asking
+    for fewer slice the leading columns host-side."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    vals, ids = jax.lax.top_k(lp, k)
+    return ids.astype(jnp.int32), vals.astype(jnp.float32)
 
 
 def _shift_draft(chain):

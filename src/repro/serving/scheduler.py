@@ -59,7 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -98,6 +98,10 @@ class Completion:
     finish_reason: str = "length"  # 'length' | 'stop'
     logprobs: Optional[np.ndarray] = None   # (n_generated,) float32 if
     #                               SamplingParams.logprobs was requested
+    top_ids: Optional[np.ndarray] = None       # (n_generated, k) int32 and
+    top_logprobs: Optional[np.ndarray] = None  # (n_generated, k) float32:
+    #                               the k alternative tokens per emitted
+    #                               position (SamplingParams.logprobs=k)
 
 
 @dataclasses.dataclass
@@ -108,8 +112,29 @@ class StreamEvent:
     rid: int
     tokens: List[int]
     logprobs: Optional[List[float]] = None
+    top_ids: Optional[List[List[int]]] = None       # per new token: the k
+    top_logprobs: Optional[List[List[float]]] = None  # alternatives
     done: bool = False
     completion: Optional[Completion] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerStats:
+    """Structured occupancy snapshot — the telemetry a replica router
+    places on (queue + slot load, allocator block supply) without
+    poking scheduler internals."""
+    queue_depth: int              # submitted, not yet admitted
+    active_slots: int             # lanes currently decoding
+    free_slots: int
+    free_blocks: int              # allocatable (free + evictable cached)
+    cached_blocks: int            # cached-free blocks holding warm prefixes
+    indexed_blocks: int           # blocks published in the prefix index
+    reserved_blocks: int          # reserved-but-unbound generation budget
+
+    @property
+    def load(self) -> int:
+        """Slot + queue occupancy — the least-loaded routing signal."""
+        return self.queue_depth + self.active_slots
 
 
 @dataclasses.dataclass
@@ -131,6 +156,8 @@ class _Slot:
     cow_block: Optional[int]      # reserved private copy for the shared
     cow_index: int = -1           # first-divergent block (lazy COW)
     lps: Optional[List[float]] = None   # chosen-token logprobs if asked
+    alts: Optional[List[Tuple[List[int], List[float]]]] = None
+    #                             # per-position top-k (ids, logprobs)
     stopped: bool = False         # a stop sequence completed
 
 
@@ -213,6 +240,11 @@ class Scheduler:
                 f"request {req.rid}: prompt+max_new "
                 f"{len(req.prompt) + sp.max_new_tokens} exceeds "
                 f"max_seq_len {self.max_seq_len}")
+        cap = getattr(self.runner, "max_logprobs", None)
+        if cap is not None and sp.logprobs > cap:
+            raise ValueError(
+                f"request {req.rid}: logprobs={sp.logprobs} exceeds the "
+                f"runner's max_logprobs {cap} (the compiled top-k width)")
         if sp.greedy:
             self.greedy_requests += 1
         else:
@@ -222,6 +254,34 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self._queue) or any(s is not None for s in self._slots)
+
+    def stats(self) -> SchedulerStats:
+        """Occupancy snapshot (see SchedulerStats): what a router needs
+        to place load, and what serving telemetry reports."""
+        active = sum(1 for s in self._slots if s is not None)
+        return SchedulerStats(
+            queue_depth=len(self._queue),
+            active_slots=active,
+            free_slots=self.num_slots - active,
+            free_blocks=self.allocator.num_free,
+            cached_blocks=self.allocator.num_cached,
+            indexed_blocks=self.allocator.num_indexed,
+            reserved_blocks=self._reserved_budget)
+
+    def take_queued(self) -> List[Request]:
+        """Pull every queued-but-unadmitted request out of the queue, in
+        order (drain/failover: the router requeues them on another
+        replica). Admitted requests keep their slots and run to
+        completion. The submit-time greedy/sampled counters are rolled
+        back so this scheduler's stats count only work it kept."""
+        out = list(self._queue)
+        self._queue.clear()
+        for r in out:
+            if r.sampling.greedy:
+                self.greedy_requests -= 1
+            else:
+                self.sampled_requests -= 1
+        return out
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
@@ -294,9 +354,37 @@ class Scheduler:
                      n_blocks=n_prompt, budget=budget, cow_block=cow_block,
                      cow_index=cow_index, t_admit=self._now())
 
+    def _defer_for_group_prefix(self, req: Request, match: PrefixMatch,
+                                plans: List[_Plan]) -> bool:
+        """True when `req`'s prompt shares MORE full prefix blocks with
+        a groupmate already in `plans` than the index currently matches:
+        admitting it in this same dispatch would recompute a prefix that
+        registers the moment the group's prefill lands (rows of one
+        batched dispatch cannot read blocks their groupmates are about
+        to write). Deferring it to the NEXT group — formed later in this
+        very admit() call, after `_dispatch` registered the blocks —
+        turns those tokens into cache hits instead."""
+        if not self.prefix_cache:
+            return False
+        bs = self.block_size
+        matched = match.tokens(bs)
+        a = req.prompt
+        for p in plans:
+            b = p.req.prompt
+            m = min(len(a), len(b))
+            eq = np.asarray(a[:m]) == np.asarray(b[:m])
+            shared = int(eq.argmin()) if not eq.all() else m
+            if (shared // bs) * bs > matched:
+                return True
+        return False
+
     def admit(self) -> None:
         """Form same-bucket groups from the queue and admit each group
-        in one batched prefill dispatch, while lanes and blocks last."""
+        in one batched prefill dispatch, while lanes and blocks last.
+        A request whose prefix overlaps a groupmate's beyond what the
+        cache already holds is deferred one group (see
+        `_defer_for_group_prefix`) so it shares blocks instead of
+        recomputing them."""
         while True:
             free = self._free_slots()
             if not free or not self._queue:
@@ -308,6 +396,9 @@ class Scheduler:
             while self._queue and len(plans) < cap:
                 req = self._queue[0]
                 match = self._match(req)  # peek: takes no references
+                if self._defer_for_group_prefix(req, match, plans):
+                    skipped.append(self._queue.popleft())
+                    continue
                 suf = len(req.prompt) - min(
                     match.tokens(self.block_size), len(req.prompt) - 1)
                 b = self.runner.suffix_bucket(suf)
@@ -331,9 +422,9 @@ class Scheduler:
                            cached_len=p.cached, slot=p.slot,
                            table_row=p.table_row,
                            sampling=p.req.sampling) for p in plans]
-        first, lp = self.runner.prefill(rows)   # blocks: TTFT covers it
+        first, lp, alt = self.runner.prefill(rows)  # blocks: TTFT covers it
         t_first = self._now()
-        for p, tok, tok_lp in zip(plans, first, lp):
+        for i, (p, tok, tok_lp) in enumerate(zip(plans, first, lp)):
             P = len(p.req.prompt)
             sp = p.req.sampling
             if self.prefix_cache:
@@ -350,31 +441,55 @@ class Scheduler:
                 n_blocks=p.n_blocks, prompt_blocks=p.n_blocks,
                 budget=p.budget, cow_block=p.cow_block,
                 cow_index=p.cow_index,
-                lps=[] if sp.logprobs else None)
+                lps=[] if sp.logprobs else None,
+                alts=[] if sp.logprobs else None)
             self._slots[p.slot] = s
             if self._stop_cut(s, [int(tok)]) is not None:
                 s.stopped = True
-            self._emit(s, [int(tok)], [float(tok_lp)])
+            self._emit(s, [int(tok)], [float(tok_lp)],
+                       self._slice_alt(s, alt, i))
             self._maybe_finish(p.slot)
 
     # ------------------------------------------------------------------
     # emission + unified stop handling (eos == a one-token stop seq)
     # ------------------------------------------------------------------
 
+    @staticmethod
+    def _slice_alt(s: _Slot, alt, row: int, positions=None):
+        """Per-request view of a runner alt side output: the request's
+        own k columns (k = sp.logprobs <= the compiled width) at `row`
+        (and each of `positions` for the (B, T, K) verify layout).
+        None when the request didn't ask or the dispatch carried none."""
+        if alt is None or not s.sp.logprobs:
+            return None
+        ids, lps = alt
+        k = s.sp.logprobs
+        if positions is None:
+            return [(ids[row, :k].tolist(), lps[row, :k].tolist())]
+        return [(ids[row, t, :k].tolist(), lps[row, t, :k].tolist())
+                for t in positions]
+
     def _emit(self, s: _Slot, tokens: List[int],
-              lps: Optional[List[float]] = None) -> None:
+              lps: Optional[List[float]] = None,
+              alts: Optional[List[Tuple[List[int],
+                                        List[float]]]] = None) -> None:
         """Append generated tokens to the output AND the proposer
         history in one place (hist == prompt + out is the proposer's
-        input invariant), record logprobs if the request asked, and
-        fire the streaming callback."""
+        input invariant), record logprobs / top-k alternatives if the
+        request asked, and fire the streaming callback."""
         s.out.extend(tokens)
         s.hist.extend(tokens)
         if s.lps is not None and lps is not None:
             s.lps.extend(lps)
+        have_alt = s.alts is not None and alts is not None
+        if have_alt:
+            s.alts.extend(alts)
         if self.on_event is not None:
             self.on_event(StreamEvent(
                 rid=s.req.rid, tokens=list(tokens),
-                logprobs=list(lps) if (s.lps is not None and lps) else None))
+                logprobs=list(lps) if (s.lps is not None and lps) else None,
+                top_ids=[a[0] for a in alts] if have_alt else None,
+                top_logprobs=[a[1] for a in alts] if have_alt else None))
 
     def _stop_cut(self, s: _Slot, new_tokens: List[int]) -> Optional[int]:
         """Earliest 1-based index into `new_tokens` at which a stop
@@ -479,7 +594,7 @@ class Scheduler:
         return tokens, positions, active
 
     def consume(self, active: List[int], next_tok: np.ndarray,
-                lp: Optional[np.ndarray] = None) -> None:
+                lp: Optional[np.ndarray] = None, alt=None) -> None:
         """Advance each active lane with its sampled token; finish and
         evict lanes that hit max_new_tokens or a stop sequence."""
         for i in active:
@@ -490,7 +605,8 @@ class Scheduler:
             if self._stop_cut(s, [tok]) is not None:
                 s.stopped = True
             self._emit(s, [tok],
-                       [float(lp[i])] if lp is not None else None)
+                       [float(lp[i])] if lp is not None else None,
+                       self._slice_alt(s, alt, i))
             self._maybe_finish(i)
 
     # ------------------------------------------------------------------
@@ -538,7 +654,7 @@ class Scheduler:
 
     def consume_verify(self, active: List[int], out_tok: np.ndarray,
                        accept: np.ndarray,
-                       lp: Optional[np.ndarray] = None) -> None:
+                       lp: Optional[np.ndarray] = None, alt=None) -> None:
         """Accept/rollback after a verify dispatch. out_tok: (num_slots,
         T) emitted tokens at every chain position (model argmax for
         greedy lanes; accepted drafts + the residual-resampled
@@ -576,7 +692,8 @@ class Scheduler:
             s = self._slots[i]
             if stopped:
                 s.stopped = True
-            self._emit(s, emitted, lps)
+            self._emit(s, emitted, lps,
+                       self._slice_alt(s, alt, i, range(len(emitted))))
             s.pos += len(emitted)
             s.pending = emitted[-1]
             # rejected suffix: free exactly the blocks it claimed
@@ -600,7 +717,11 @@ class Scheduler:
             cached_tokens=min(s.cached, len(s.req.prompt) - 1),
             finish_reason="stop" if s.stopped else "length",
             logprobs=(np.asarray(s.lps, np.float32)
-                      if s.lps is not None else None))
+                      if s.lps is not None else None),
+            top_ids=(np.asarray([a[0] for a in s.alts], np.int32)
+                     if s.alts is not None else None),
+            top_logprobs=(np.asarray([a[1] for a in s.alts], np.float32)
+                          if s.alts is not None else None))
         self.completions.append(completion)
         for b in s.table_row:
             if b != NULL_BLOCK:

@@ -435,7 +435,97 @@ def test_chosen_token_logprobs():
         lp = done[rid].logprobs
         assert lp is not None and lp.shape == (len(done[rid].tokens),)
         assert np.isfinite(lp).all() and (lp <= 0).all()
+        # logprobs=True is the back-compat spelling of k=1
+        assert done[rid].top_ids.shape == (len(done[rid].tokens), 1)
     assert done[2].logprobs is None              # not requested
+    assert done[2].top_ids is None and done[2].top_logprobs is None
+
+
+def test_top_alternatives_unit():
+    logits = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 3, 16))
+    ids, lps = sampling.top_alternatives(logits, 5)
+    assert ids.shape == (2, 3, 5) and lps.shape == (2, 3, 5)
+    ref = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    np.testing.assert_allclose(
+        np.asarray(lps), np.take_along_axis(ref, np.asarray(ids), -1),
+        rtol=1e-6)
+    assert (np.diff(np.asarray(lps), axis=-1) <= 1e-7).all()  # descending
+    np.testing.assert_array_equal(np.asarray(ids[..., 0]),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+def test_topk_alternative_logprobs_decode_and_verify_paths():
+    """SamplingParams.logprobs=k (satellite): Completion carries the k
+    alternative (ids, logprobs) per emitted position, through the plain
+    decode path AND the speculative verify path (repetitive prompt so
+    chains really verify), for greedy and sampled lanes — and the
+    greedy realization is unchanged by asking for them."""
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    pat = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    prompt = np.tile(pat, 4)[:16]
+    for speculate in (0, 3):
+        eng = ServingEngine(params, cfg, num_slots=2, block_size=4,
+                            max_seq_len=32, speculate=speculate)
+        reqs = [Request(rid=0, prompt=prompt.copy(),
+                        sampling=SamplingParams(max_new_tokens=8,
+                                                logprobs=3)),
+                Request(rid=1, prompt=prompt.copy(),
+                        sampling=SamplingParams(max_new_tokens=8,
+                                                temperature=0.9, seed=11,
+                                                top_k=4, logprobs=2))]
+        done = {c.rid: c for c in eng.run(reqs)}
+        if speculate:
+            assert eng.scheduler.accepted_tokens > 0   # verify path ran
+        g = done[0]
+        assert g.top_ids.shape == (8, 3)
+        assert g.top_logprobs.shape == (8, 3)
+        # greedy chosen token IS the top-1 alternative, logprob matches,
+        # alternatives sorted descending
+        np.testing.assert_array_equal(g.tokens, g.top_ids[:, 0])
+        np.testing.assert_allclose(g.logprobs, g.top_logprobs[:, 0],
+                                   rtol=1e-5)
+        assert (np.diff(g.top_logprobs, axis=1) <= 1e-6).all()
+        np.testing.assert_array_equal(
+            g.tokens, _expect(params, cfg, reqs[0]))   # output unchanged
+        s = done[1]
+        assert s.top_ids.shape == (8, 2)
+        # a sampled token need not be the argmax, but its RAW-dist
+        # logprob can never exceed the top alternative's
+        assert (s.logprobs <= s.top_logprobs[:, 0] + 1e-6).all()
+    # streaming carries the same alternatives the completion records
+    eng = ServingEngine(params, cfg, num_slots=2, block_size=4,
+                        max_seq_len=32, speculate=3)
+    got_ids, final = [], None
+    for ev in eng.stream([Request(rid=0, prompt=prompt.copy(),
+                                  sampling=SamplingParams(
+                                      max_new_tokens=8, logprobs=3))]):
+        if ev.done:
+            final = ev.completion
+        else:
+            assert len(ev.top_ids) == len(ev.tokens)
+            got_ids.extend(ev.top_ids)
+    np.testing.assert_array_equal(np.asarray(got_ids, np.int32),
+                                  final.top_ids)
+
+
+def test_logprobs_validation_and_cap():
+    with pytest.raises(ValueError):
+        SamplingParams(logprobs=-1)
+    assert SamplingParams(logprobs=True).logprobs == 1
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, num_slots=1, block_size=4,
+                        max_seq_len=32, max_logprobs=4)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                           sampling=SamplingParams(max_new_tokens=2,
+                                                   logprobs=5)))
+    done = eng.run([Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                            sampling=SamplingParams(max_new_tokens=2,
+                                                    logprobs=4))])
+    assert done[0].top_ids.shape == (2, 4)
 
 
 def test_engine_deprecation_shim_and_default_sampling():
@@ -485,6 +575,7 @@ class _FakeRunner:
     """Host-only runner stand-in (block accounting needs no device)."""
 
     prefill_max_batch = 4
+    max_logprobs = 8
 
     def __init__(self, speculate=8):
         self.prefill_buckets = pow2_buckets(64, start=8)
@@ -498,12 +589,12 @@ class _FakeRunner:
 
     def prefill(self, rows):
         return (np.full(len(rows), 1, np.int32),
-                np.zeros(len(rows), np.float32))
+                np.zeros(len(rows), np.float32), None)
 
     def verify(self, tokens, positions, counts):
         return (np.full(tokens.shape, -1, np.int32),
                 np.zeros(tokens.shape[0], np.int32),
-                np.zeros(tokens.shape, np.float32))
+                np.zeros(tokens.shape, np.float32), None)
 
     def commit(self, idx):
         pass

@@ -351,6 +351,7 @@ class _FakeRunner:
     never needs the device."""
 
     prefill_max_batch = 4
+    max_logprobs = 8
 
     def __init__(self, speculate=8):
         self.prefill_buckets = pow2_buckets(64, start=8)
@@ -366,14 +367,14 @@ class _FakeRunner:
 
     def prefill(self, rows):
         return (np.full(len(rows), 1, np.int32),
-                np.zeros(len(rows), np.float32))
+                np.zeros(len(rows), np.float32), None)
 
     def verify(self, tokens, positions, counts):
         # rejects everything: the emitted correction disagrees with
         # every draft and zero drafts are accepted
         return (np.full(tokens.shape, -1, np.int32),
                 np.zeros(tokens.shape[0], np.int32),
-                np.zeros(tokens.shape, np.float32))
+                np.zeros(tokens.shape, np.float32), None)
 
     def commit(self, idx):
         pass
