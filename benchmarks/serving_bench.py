@@ -53,18 +53,28 @@ results; greedy-only records are unchanged.
     PYTHONPATH=src python benchmarks/serving_bench.py --arch smollm-135m \
         --workload repetitive --requests 24 --speculate 4 --draft ngram
 
+Every record carries a `meta` provenance block (schema version, git
+rev, jax/numpy/python versions, backend) so `scripts/bench_compare.py`
+can refuse to diff incomparable records, plus an `observability` arm:
+the same workload on a fresh engine with the recorder ON, gated on
+bit-identity to the recorder-off run, with the metrics snapshot
+embedded and both exporter schemas validated. The perf arms always run
+recorder-off so committed numbers stay comparable across revisions.
+
 --smoke shrinks everything for the CI gate (fixed seed) and asserts
 acceptance rate > 0, greedy bit-identity, the verify-compilation
-bound, and (with --temperature) the sampled-arm gates. Writes the
-trajectory record to experiments/serving/bench_<arch>_<workload>.json.
-Importable: `run_bench([...])` returns the record (used by the CI
-smoke test).
+bound, trace-on identity + exporter validity, and (with --temperature)
+the sampled-arm gates. Writes the trajectory record to
+experiments/serving/bench_<arch>_<workload>.json. Importable:
+`run_bench([...])` returns the record (used by the CI smoke test).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
+import subprocess
 import time
 from typing import List, Optional
 
@@ -81,12 +91,46 @@ from repro.serving.engine import (ServingEngine, multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.observability import (Observability, metrics_dump,
+                                         to_perfetto,
+                                         validate_metrics_dump,
+                                         validate_trace_events)
 from repro.serving.replica import Replica
 from repro.serving.router import POLICIES, Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "serving")
+
+# bump when the record layout changes incompatibly — bench_compare
+# refuses to diff records across schema versions
+BENCH_SCHEMA = "repro.serving.bench/v1"
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _run_meta(args) -> dict:
+    """Provenance block stamped into every bench record: enough to tell
+    whether two records are comparable (code rev, library versions,
+    backend) before diffing their numbers."""
+    return {
+        "schema": BENCH_SCHEMA,
+        "git_rev": _git_rev(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": platform.python_version(),
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+    }
 
 
 def run_baseline(params, cfg, requests, batch: int):
@@ -336,6 +380,7 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     base_tps = base_tok / base_s
     eng_tps = eng_tok / eng_s
     record = {
+        "meta": _run_meta(args),
         "arch": args.arch,
         "workload": args.workload,
         "requests": args.requests,
@@ -348,6 +393,43 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         "engine": eng_stats,
         "speedup": round(eng_tps / base_tps, 2),
     }
+    # ---- observability arm (recorder ON; not a perf arm) ------------
+    # gates the bit-identity contract — tracing must never change
+    # output — checks that the emitted-token counter reconciles with
+    # completion totals, and embeds the metrics snapshot in the record
+    obs = Observability()
+    obs_engine = ServingEngine(params, cfg, num_slots=args.slots,
+                               block_size=args.block_size,
+                               max_seq_len=max_seq,
+                               num_blocks=_pool_blocks(args, max_seq),
+                               prefill_max_batch=args.prefill_batch,
+                               obs=obs)
+    obs_done = obs_engine.run(list(reqs))
+    obs_ref = {c.rid: c.tokens for c in eng_done}
+    obs_identical = ({c.rid for c in obs_done} == set(obs_ref) and all(
+        np.array_equal(obs_ref[c.rid], c.tokens) for c in obs_done))
+    mdump = metrics_dump(obs)
+    trace = to_perfetto(obs)
+    emitted = obs.registry.total("tokens_emitted_total")
+    obs_gen = sum(len(c.tokens) for c in obs_done)
+    record["observability"] = {
+        "trace_identical": obs_identical,
+        "trace_events": len(trace["traceEvents"]),
+        "trace_schema_errors": validate_trace_events(trace),
+        "metrics_schema_errors": validate_metrics_dump(mdump),
+        "tokens_counter_reconciles": emitted == obs_gen,
+        "metrics": mdump,
+    }
+    print(f"obs_trace_identical,{obs_identical},recorder on vs off")
+    print(f"obs_tokens_counter,{emitted},vs {obs_gen} completion tokens")
+    if args.smoke:
+        assert obs_identical, "tracing changed engine output"
+        assert emitted == obs_gen, \
+            "tokens_emitted_total does not reconcile with completions"
+        assert not record["observability"]["trace_schema_errors"], \
+            "trace export failed schema validation"
+        assert not record["observability"]["metrics_schema_errors"], \
+            "metrics dump failed schema validation"
     if args.workload == "shared-prefix":
         (_, _, nocache, _), _ = _measure_engine(
             params, cfg, args, reqs, max_seq, prefix_cache=False)

@@ -1,0 +1,152 @@
+"""Diff two serving_bench records and flag perf regressions.
+
+The tracked-trajectory tool: serving_bench stamps every record with a
+`meta` provenance block (schema version, git rev, library versions);
+this script loads an old and a new record, checks they are comparable
+(same schema / arch / workload), diffs every throughput and latency
+metric it can find, and exits nonzero when any regresses beyond the
+threshold — throughput drops or latency rises by more than
+``--threshold`` (default 10%).
+
+    PYTHONPATH=src python scripts/bench_compare.py \
+        experiments/serving/bench_smollm-135m_uniform.json new.json \
+        --threshold 0.15
+
+Importable: ``compare(old, new, threshold)`` returns a structured
+report (used by tests/test_observability.py). Records from different
+schema versions, archs, or workloads refuse to compare; records whose
+meta (git rev, backend, versions) differs still compare but the report
+says what changed, so a regression can be attributed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+# metric paths diffed between records: (dotted path, higher_is_better)
+METRICS: List[Tuple[str, bool]] = [
+    ("baseline.tokens_per_s", True),
+    ("engine.tokens_per_s", True),
+    ("engine.ttft_p50_ms", False),
+    ("engine.ttft_p99_ms", False),
+    ("engine.latency_p50_ms", False),
+    ("engine.latency_p99_ms", False),
+    ("engine.tpot_p50_ms", False),
+    ("speedup", True),
+    ("engine_speculative.tokens_per_s", True),
+    ("engine_speculative.speculation.acceptance_rate", True),
+    ("spec_speedup", True),
+    ("engine_sampled.tokens_per_s", True),
+    ("engine_no_prefix_cache.tokens_per_s", True),
+    ("prefill_tokens_saved", True),
+]
+
+
+def _get(record: Dict[str, Any], path: str) -> Optional[float]:
+    node: Any = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def _comparable(old: Dict, new: Dict) -> Optional[str]:
+    """Reason the two records must NOT be diffed, or None if they may."""
+    for key in ("arch", "workload"):
+        if old.get(key) != new.get(key):
+            return (f"{key} differs: {old.get(key)!r} vs {new.get(key)!r}")
+    old_schema = (old.get("meta") or {}).get("schema")
+    new_schema = (new.get("meta") or {}).get("schema")
+    if old_schema != new_schema:
+        return f"schema differs: {old_schema!r} vs {new_schema!r}"
+    return None
+
+
+def compare(old: Dict, new: Dict, threshold: float = 0.10) -> Dict:
+    """Structured diff of two bench records. Returns a report with a
+    `regressions` list (metrics that moved the WRONG way by more than
+    `threshold`, as a fraction), an `improvements` list, the full
+    per-metric delta table, and `meta_changes` (provenance fields that
+    differ — context for attributing a regression). Raises ValueError
+    when the records are not comparable (different schema version,
+    arch, or workload)."""
+    reason = _comparable(old, new)
+    if reason is not None:
+        raise ValueError(f"records are not comparable: {reason}")
+    deltas, regressions, improvements = [], [], []
+    for path, higher_better in METRICS:
+        a, b = _get(old, path), _get(new, path)
+        if a is None or b is None:
+            continue
+        if a == 0:
+            rel = 0.0 if b == 0 else float("inf") * (1 if b > 0 else -1)
+        else:
+            rel = (b - a) / abs(a)
+        # "gain" is movement in the good direction
+        gain = rel if higher_better else -rel
+        row = {"metric": path, "old": a, "new": b,
+               "change_pct": round(rel * 100, 2)}
+        deltas.append(row)
+        if gain < -threshold:
+            regressions.append(row)
+        elif gain > threshold:
+            improvements.append(row)
+    meta_changes = {}
+    old_meta, new_meta = old.get("meta") or {}, new.get("meta") or {}
+    for key in sorted(set(old_meta) | set(new_meta)):
+        if old_meta.get(key) != new_meta.get(key):
+            meta_changes[key] = {"old": old_meta.get(key),
+                                 "new": new_meta.get(key)}
+    return {
+        "arch": old.get("arch"),
+        "workload": old.get("workload"),
+        "threshold_pct": round(threshold * 100, 2),
+        "metrics": deltas,
+        "regressions": regressions,
+        "improvements": improvements,
+        "meta_changes": meta_changes,
+        "ok": not regressions,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two serving_bench records; exit 1 on any "
+                    "regression beyond --threshold")
+    ap.add_argument("old", help="baseline bench record (JSON)")
+    ap.add_argument("new", help="candidate bench record (JSON)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression tolerance (0.10 = 10%%)")
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    try:
+        report = compare(old, new, args.threshold)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for row in report["metrics"]:
+        mark = ""
+        if row in report["regressions"]:
+            mark = "  <-- REGRESSION"
+        elif row in report["improvements"]:
+            mark = "  (improved)"
+        print(f"{row['metric']},{row['old']},{row['new']},"
+              f"{row['change_pct']:+.2f}%{mark}")
+    for key, ch in report["meta_changes"].items():
+        print(f"meta.{key},{ch['old']},{ch['new']},changed")
+    if report["regressions"]:
+        print(f"{len(report['regressions'])} regression(s) beyond "
+              f"{report['threshold_pct']}%", file=sys.stderr)
+        return 1
+    print(f"ok: no regression beyond {report['threshold_pct']}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

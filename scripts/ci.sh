@@ -17,6 +17,11 @@
 #                              # the 1-replica run, and that
 #                              # prefix-affinity cache-skips strictly
 #                              # more prompt tokens than round-robin)
+#                              # + the observability smoke: serve.py
+#                              # emits --trace-out/--metrics-out, both
+#                              # exports are schema-validated, and the
+#                              # bench obs arm asserts outputs stay
+#                              # bit-identical with tracing enabled
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -26,6 +31,30 @@ case "${1:-fast}" in
   full)    shift;         exec python -m pytest -x -q "$@" ;;
   serving) shift
            python -m pytest -x -q -m serving "$@"
+           # observability smoke: a tiny served run must export a valid
+           # Perfetto trace + metrics dump (serve.py exits nonzero on
+           # schema errors; re-validated here from the files on disk)
+           obs_dir="$(mktemp -d)"
+           python -m repro.launch.serve --requests 4 --slots 2 \
+                --prompt-len 8 16 --max-new 2 4 --seed 0 \
+                --trace-out "$obs_dir/trace.json" \
+                --metrics-out "$obs_dir/metrics.json"
+           python - "$obs_dir" <<'PY'
+import json, sys
+from repro.serving.observability import (validate_metrics_dump,
+                                         validate_trace_events)
+d = sys.argv[1]
+with open(f"{d}/trace.json") as f:
+    errs = validate_trace_events(json.load(f))
+assert not errs, errs
+with open(f"{d}/metrics.json") as f:
+    errs = validate_metrics_dump(json.load(f))
+assert not errs, errs
+print("observability exports valid")
+PY
+           # bench smokes (the repetitive one also asserts the obs-arm
+           # bit-identity gate: tracing on == tracing off, counters
+           # reconcile, exporters valid)
            python benchmarks/serving_bench.py --workload repetitive \
                 --smoke --seed 0 --temperature 0.8 --top-k 2 \
                 --out "$(mktemp -d)"

@@ -28,6 +28,13 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
         --router prefix --workload multi-tenant --tenants 4
 
+    # observability: export a Perfetto-loadable trace (request lifecycle
+    # spans per slot + the dispatch timeline) and a metrics dump
+    # (counters/gauges/histograms + occupancy time series); outputs stay
+    # bit-identical with the recorder on:
+    PYTHONPATH=src python -m repro.launch.serve --requests 8 \
+        --trace-out trace.json --metrics-out metrics.json
+
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
     PYTHONPATH=src python -m repro.launch.serve --mode naive --batch 4
@@ -55,6 +62,10 @@ from repro.serving.engine import (Request, ServingEngine,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
+from repro.serving.observability import (NULL_OBS, Observability,
+                                         export_metrics, export_trace,
+                                         validate_metrics_dump,
+                                         validate_trace_events)
 from repro.serving.replica import Replica
 from repro.serving.router import Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
@@ -161,16 +172,35 @@ def _run_engine(args, cfg, params):
     reqs = _make_workload(args, cfg)
     max_prompt = max(len(r.prompt) for r in reqs)
     kwargs = _engine_kwargs(args, max_prompt + max(args.max_new) + 1)
+    # the recorder is on only when an export was asked for — the default
+    # NULL_OBS path records nothing and adds no work (and outputs are
+    # bit-identical either way)
+    tracing = bool(args.trace_out or args.metrics_out)
+    obs = Observability() if tracing else NULL_OBS
     if args.replicas > 1:
-        replicas = [Replica(params, cfg, replica_id=i, **kwargs)
+        replicas = [Replica(params, cfg, replica_id=i, obs=obs, **kwargs)
                     for i in range(args.replicas)]
-        router = Router(replicas, policy=args.router)
+        router = Router(replicas, policy=args.router, obs=obs)
         done = router.run(reqs)
         stats = summarize_cluster(done, router.wall_time, router)
     else:
-        engine = ServingEngine(params, cfg, **kwargs)
+        engine = ServingEngine(params, cfg, obs=obs, **kwargs)
         done = engine.run(reqs)
         stats = summarize(done, engine.wall_time, engine)
+    if args.trace_out:
+        doc = export_trace(obs, args.trace_out)
+        errs = validate_trace_events(doc)
+        if errs:
+            raise SystemExit(f"invalid trace_event export: {errs[:3]}")
+        print(f"wrote {len(doc['traceEvents'])} trace events "
+              f"to {args.trace_out} (open in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        doc = export_metrics(obs, args.metrics_out)
+        errs = validate_metrics_dump(doc)
+        if errs:
+            raise SystemExit(f"invalid metrics dump: {errs[:3]}")
+        print(f"wrote metrics ({len(doc['counters'])} counters, "
+              f"{len(doc['series'])} series samples) to {args.metrics_out}")
     print(json.dumps(stats, indent=1))
     if done:
         sample = min(done, key=lambda c: c.rid)
@@ -264,6 +294,15 @@ def main():
     ap.add_argument("--logprobs", type=int, default=0,
                     help="record the chosen token's logprob plus the "
                          "top-k alternatives per position (0 = off)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of "
+                         "the run (request lifecycle spans per slot, "
+                         "dispatch timeline; open in ui.perfetto.dev). "
+                         "Enables the observability recorder.")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry dump JSON (counters/"
+                         "gauges/histograms + SchedulerStats time series). "
+                         "Enables the observability recorder.")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

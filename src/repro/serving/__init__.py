@@ -41,6 +41,13 @@ sticky placement, drain/failover, and cluster-level run()/stream()
 that merge per-replica streams. Outputs are bit-identical to a
 single-replica run for every policy and replica count (the
 batch-composition-independence guarantee, one level up).
+
+Cross-cutting: `observability.py` — a zero-cost-when-off recorder
+(metrics registry + request-lifecycle tracing + Chrome/Perfetto
+trace_event and metrics-dump exporters) that every layer publishes
+into. Pass `obs=Observability()` to ServingEngine / Replica / Router;
+the default NULL_OBS records nothing and adds no work to the hot path,
+and outputs are bit-identical either way.
 """
 from repro.serving.block_manager import BlockAllocator, PrefixMatch
 from repro.serving.bucketing import next_pow2, pick_bucket, pow2_buckets
@@ -51,6 +58,12 @@ from repro.serving.engine import (Completion, Request, ServingEngine,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
 from repro.serving.kv_cache import init_paged_state
+from repro.serving.observability import (NULL_OBS, MetricsRegistry,
+                                         Observability, export_metrics,
+                                         export_trace, metrics_dump,
+                                         to_perfetto,
+                                         validate_metrics_dump,
+                                         validate_trace_events)
 from repro.serving.replica import Replica, ReplicaSnapshot
 from repro.serving.router import (POLICIES, Router, normalize_policy,
                                   summarize_cluster)
@@ -66,4 +79,7 @@ __all__ = ["ServingEngine", "Request", "Completion", "SamplingParams",
            "normalize_policy", "summarize_cluster",
            "BlockAllocator", "PrefixMatch", "ModelRunner", "Scheduler",
            "init_paged_state", "NGramProposer", "make_proposer",
-           "next_pow2", "pick_bucket", "pow2_buckets"]
+           "next_pow2", "pick_bucket", "pow2_buckets",
+           "Observability", "NULL_OBS", "MetricsRegistry", "to_perfetto",
+           "metrics_dump", "export_trace", "export_metrics",
+           "validate_trace_events", "validate_metrics_dump"]

@@ -76,9 +76,14 @@ class BlockAllocator:
     (match_prefix / register_prefix); a plain allocator can pass 0.
     """
 
-    def __init__(self, num_blocks: int, block_size: int = 0):
+    def __init__(self, num_blocks: int, block_size: int = 0,
+                 obs=None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        from repro.serving.observability import NULL_OBS
+        self._obs = obs or NULL_OBS
+        self._c_allocs = self._obs.counter("blocks_allocated_total")
+        self._c_evictions = self._obs.counter("cache_evictions_total")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
@@ -131,9 +136,11 @@ class BlockAllocator:
                 self._evict(victim)
                 self._free.append(victim)
                 self.cache_evictions += 1
+                self._c_evictions.inc()
             b = self._free.pop()
             self._ref[b] = 1
             blocks.append(b)
+        self._c_allocs.inc(n)
         return blocks
 
     def _evict(self, block: int) -> None:

@@ -62,6 +62,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.serving.block_manager import BlockAllocator
 from repro.serving.kv_cache import ATTN_KINDS
+from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.runner import ModelRunner
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (Completion, Request, Scheduler,
@@ -108,7 +109,8 @@ class ServingEngine:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4, speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3,
-                 max_logprobs: int = 8):
+                 max_logprobs: int = 8,
+                 obs: Observability = NULL_OBS):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "serving engine currently supports text LMs only")
@@ -140,22 +142,25 @@ class ServingEngine:
 
         self.speculate = max(0, speculate)
         self.draft = draft
-        self.allocator = BlockAllocator(num_blocks, block_size=block_size)
+        self.obs = obs or NULL_OBS
+        self._t0 = time.perf_counter()  # engine clock origin (reset by run)
+        self.allocator = BlockAllocator(num_blocks, block_size=block_size,
+                                        obs=self.obs)
         self.runner = ModelRunner(
             params, cfg, num_slots=num_slots, block_size=block_size,
             num_blocks=num_blocks,
             max_blocks_per_seq=self.max_blocks_per_seq,
             prefill_buckets=prefill_buckets,
             prefill_max_batch=prefill_max_batch, speculate=self.speculate,
-            max_logprobs=max_logprobs)
-        self._t0 = time.perf_counter()  # engine clock origin (reset by run)
+            max_logprobs=max_logprobs, obs=self.obs, now_fn=self._now)
         self.scheduler = Scheduler(
             self.allocator, self.runner, num_slots=num_slots,
             block_size=block_size,
             max_blocks_per_seq=self.max_blocks_per_seq,
             max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
             now_fn=self._now, speculate=self.speculate, draft=draft,
-            ngram=ngram, default_sampling=self.default_sampling)
+            ngram=ngram, default_sampling=self.default_sampling,
+            obs=self.obs)
         self.cache_bytes = self.runner.cache_bytes
         self.steps = 0                # decode+verify iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
@@ -193,6 +198,7 @@ class ServingEngine:
         self.scheduler.reset_stats()      # telemetry is per run
         self.runner.reset_stats()
         self.allocator.cache_evictions = 0
+        self.obs.begin_run()
 
     def reset_prefix_cache(self) -> None:
         """Drop cached prompt blocks (e.g. between benchmark runs)."""
@@ -206,6 +212,10 @@ class ServingEngine:
         iteration falls back to the plain decode dispatch, so idle
         proposers cost nothing."""
         self.scheduler.admit()
+        if self.obs.enabled:
+            # occupancy time series (sampled post-admission so queue
+            # depth and slot occupancy reflect this step's batch)
+            self.obs.sample_stats(self._now(), self.scheduler.stats())
         if self.speculate:
             vb = self.scheduler.prepare_verify()
             if vb is not None:
@@ -420,9 +430,18 @@ def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
     return out
 
 
+def _rate(count: float, wall: float) -> float:
+    """count/wall as a rate, well-defined for degenerate runs: a zero or
+    negative wall clock (e.g. a run whose work all landed inside one
+    clock tick) reports 0.0 instead of a nonsense near-infinite rate."""
+    return round(count / wall, 2) if wall > 0 else 0.0
+
+
 def summarize(completions: Sequence[Completion], wall: float,
               engine: Optional[ServingEngine] = None) -> Dict:
-    """Throughput / latency telemetry over a finished run."""
+    """Throughput / latency telemetry over a finished run. Well-defined
+    for degenerate inputs: empty completion lists, a single completion
+    (percentiles collapse to that value), and zero wall clock."""
     if not completions:
         stats = {"requests": 0, "generated_tokens": 0,
                  "wall_s": round(wall, 4), "tokens_per_s": 0.0}
@@ -438,7 +457,7 @@ def summarize(completions: Sequence[Completion], wall: float,
         "requests": len(completions),
         "generated_tokens": gen,
         "wall_s": round(wall, 4),
-        "tokens_per_s": round(gen / max(wall, 1e-9), 2),
+        "tokens_per_s": _rate(gen, wall),
         "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 2),
         "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 2),
         "latency_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),

@@ -1,0 +1,575 @@
+"""Serving observability: metrics registry, request-lifecycle tracing,
+and exporters (Chrome/Perfetto trace_event JSON + metrics-dump JSON).
+
+The telemetry layer every serving component publishes into (kernels'
+dispatch records come via the runner; scheduler, block manager, engine,
+replica, and router each have their own instruments). The source
+paper's tradeoff — communication vs memory vs computation — is only
+navigable with measurements; this module records the signals the
+control loops above the engine (SLO autoscaling, adaptive speculation
+length) will steer by.
+
+Three pieces:
+
+  * `MetricsRegistry` — labeled counters, gauges, and fixed-bucket
+    histograms (e.g. `scheduler_admitted_total{replica=0}`,
+    `blocks_cached_gauge`, `verify_accept_len_hist{slot=3}`). Layers
+    resolve their instruments ONCE at construction and call
+    `inc`/`set`/`observe` on the hot path; the registry also holds the
+    periodic `SchedulerStats`-derived time series (`series`) that an
+    autoscaler would consume.
+  * `Observability` — the recorder handle threaded through the stack.
+    Collects trace spans on the SHARED engine/cluster clock: per-slot
+    request-lifecycle spans (queued -> routed -> admitted -> prefill ->
+    decode -> done), per-dispatch step records (kind, batch, bucket,
+    emitted tokens, prefix-cache hits, accept lengths, and a
+    `first_dispatch` flag so jit-compile stalls are attributable
+    separately from steady-state steps), and async queue spans.
+    `scoped(replica)` returns a view sharing all storage but stamping a
+    replica label/track id — how a cluster's replicas publish into one
+    recorder.
+  * exporters — `to_perfetto()` renders the trace as Chrome
+    `trace_event` JSON (one process per replica, one thread track per
+    slot plus a `dispatch` track; open in https://ui.perfetto.dev),
+    `metrics_dump()` renders the registry as a schema-versioned JSON
+    document, and `validate_trace_events` / `validate_metrics_dump`
+    check both formats (the CI gate).
+
+The default recorder is `NULL_OBS`: every method is a no-op and
+`enabled` is False, so layers guard their bookkeeping behind one
+attribute check and the off path costs nothing. Recording never
+touches device dispatch — with observability on, engine outputs stay
+bit-identical to the recorder-off run (gated in serving_bench and
+tests/test_observability.py).
+"""
+from __future__ import annotations
+
+import copy
+import json
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# trace_event thread id of the per-replica dispatch track (slot tracks
+# use tid == slot index; any real slot count stays far below this)
+DISPATCH_TID = 1000
+
+METRICS_SCHEMA = "repro.serving.metrics/v1"
+TRACE_SCHEMA = "repro.serving.trace_event/v1"
+
+
+# ----------------------------------------------------------------------------
+# instruments
+# ----------------------------------------------------------------------------
+
+class Counter:
+    """Monotonically increasing count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Gauge:
+    """Last-written value (occupancy, rates)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def reset(self) -> None:
+        self.value = 0.0
+
+
+class Histogram:
+    """Fixed-bucket histogram: counts[i] counts observations <=
+    bounds[i]; counts[-1] is the overflow bucket (> bounds[-1])."""
+
+    __slots__ = ("bounds", "counts", "total", "count")
+
+    def __init__(self, bounds: Sequence[float]):
+        self.bounds = tuple(float(b) for b in bounds)
+        if not self.bounds or list(self.bounds) != sorted(set(self.bounds)):
+            raise ValueError(f"histogram bounds must be strictly "
+                             f"increasing and non-empty: {bounds!r}")
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        i = 0
+        for b in self.bounds:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.total += v
+        self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def reset(self) -> None:
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0.0
+        self.count = 0
+
+
+class _NullInstrument:
+    """No-op counter/gauge/histogram — what NULL_OBS hands out so hot
+    paths can hold one instrument reference unconditionally."""
+
+    __slots__ = ()
+    value = 0
+    counts: List[int] = []
+    total = 0.0
+    count = 0
+    mean = 0.0
+
+    def inc(self, n: int = 1) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+def _label_key(labels: Dict[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted(labels.items()))
+
+
+class MetricsRegistry:
+    """Labeled instruments + the stats time series. Instruments are
+    keyed (name, sorted labels); resolving the same key returns the
+    same object, so layers can cache references at construction and
+    `reset()` (per run) zeroes values IN PLACE without invalidating
+    them."""
+
+    def __init__(self):
+        self._counters: Dict[tuple, Counter] = {}
+        self._gauges: Dict[tuple, Gauge] = {}
+        self._histograms: Dict[tuple, Histogram] = {}
+        self.series: List[Dict[str, Any]] = []
+
+    def counter(self, name: str, **labels) -> Counter:
+        key = (name, _label_key(labels))
+        if key not in self._counters:
+            self._counters[key] = Counter()
+        return self._counters[key]
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        key = (name, _label_key(labels))
+        if key not in self._gauges:
+            self._gauges[key] = Gauge()
+        return self._gauges[key]
+
+    def histogram(self, name: str, bounds: Sequence[float],
+                  **labels) -> Histogram:
+        key = (name, _label_key(labels))
+        if key not in self._histograms:
+            self._histograms[key] = Histogram(bounds)
+        return self._histograms[key]
+
+    def total(self, name: str) -> int:
+        """Sum of a counter across every label set (e.g. all replicas)."""
+        return sum(c.value for (n, _), c in self._counters.items()
+                   if n == name)
+
+    def gauges_named(self, name: str) -> Dict[tuple, float]:
+        return {k[1]: g.value for k, g in self._gauges.items()
+                if k[0] == name}
+
+    def histograms_named(self, name: str) -> Dict[tuple, Histogram]:
+        return {k[1]: h for k, h in self._histograms.items()
+                if k[0] == name}
+
+    def reset(self) -> None:
+        """Zero every instrument in place and drop the series (per-run
+        telemetry); cached instrument references stay valid."""
+        for group in (self._counters, self._gauges, self._histograms):
+            for inst in group.values():
+                inst.reset()
+        self.series.clear()
+
+    def to_dict(self) -> Dict[str, Any]:
+        def rows(group, extra):
+            out = []
+            for (name, labels), inst in sorted(group.items()):
+                row = {"name": name, "labels": dict(labels)}
+                row.update(extra(inst))
+                out.append(row)
+            return out
+
+        return {
+            "counters": rows(self._counters,
+                             lambda c: {"value": c.value}),
+            "gauges": rows(self._gauges, lambda g: {"value": g.value}),
+            "histograms": rows(self._histograms, lambda h: {
+                "bounds": list(h.bounds), "counts": list(h.counts),
+                "sum": h.total, "count": h.count}),
+            "series": list(self.series),
+        }
+
+
+# ----------------------------------------------------------------------------
+# the recorder handle
+# ----------------------------------------------------------------------------
+
+class Observability:
+    """Recorder threaded through every serving layer. One instance (or
+    a `scoped(replica)` view of it) is shared by a whole engine stack;
+    a cluster shares one root across all replicas so every span sits on
+    one clock and every instrument carries its replica label.
+
+    sample_interval   minimum seconds between SchedulerStats time-series
+                      samples (0 = record every engine step).
+    """
+
+    enabled = True
+
+    def __init__(self, *, sample_interval: float = 0.05):
+        self.registry = MetricsRegistry()
+        self.sample_interval = float(sample_interval)
+        self.replica = 0
+        # trace storage (shared across scoped views)
+        self.spans: List[Dict[str, Any]] = []     # complete spans
+        self.instants: List[Dict[str, Any]] = []  # point events
+        self.asyncs: List[Dict[str, Any]] = []    # queue-phase spans
+        # mutable cells shared by every scoped view
+        self._last_sample = [None]                # [Optional[float]]
+        self._last_step: List[Optional[Dict[str, Any]]] = [None]
+
+    # -- scoping ---------------------------------------------------------
+
+    def scoped(self, replica: int) -> "Observability":
+        """A view for one replica: shares the registry and all trace
+        storage, stamps `replica` on tracks and instrument labels."""
+        view = copy.copy(self)
+        view.replica = replica
+        return view
+
+    def _labels(self, labels: Dict[str, Any]) -> Dict[str, Any]:
+        if self.replica:
+            labels.setdefault("replica", self.replica)
+        return labels
+
+    # -- instruments (replica label folded in) ---------------------------
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self.registry.counter(name, **self._labels(labels))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self.registry.gauge(name, **self._labels(labels))
+
+    def histogram(self, name: str, bounds: Sequence[float],
+                  **labels) -> Histogram:
+        return self.registry.histogram(name, bounds,
+                                       **self._labels(labels))
+
+    # -- trace spans -----------------------------------------------------
+
+    def span(self, tid: int, name: str, cat: str, t0: float, t1: float,
+             **args) -> Dict[str, Any]:
+        rec = {"pid": self.replica, "tid": tid, "name": name, "cat": cat,
+               "t0": t0, "t1": t1, "args": args}
+        self.spans.append(rec)
+        return rec
+
+    def instant(self, tid: int, name: str, cat: str, t: float,
+                **args) -> None:
+        self.instants.append({"pid": self.replica, "tid": tid,
+                              "name": name, "cat": cat, "t": t,
+                              "args": args})
+
+    def async_span(self, name: str, cat: str, aid: int, t0: float,
+                   t1: float, **args) -> None:
+        """A span that may overlap others (queue residency): rendered as
+        Perfetto async b/e pairs keyed by `aid`."""
+        self.asyncs.append({"pid": self.replica, "name": name, "cat": cat,
+                            "id": aid, "t0": t0, "t1": t1, "args": args})
+
+    # -- dispatch step records -------------------------------------------
+
+    def step(self, kind: str, t0: float, t1: float,
+             **args) -> Dict[str, Any]:
+        """One device dispatch (prefill / decode / verify) as a span on
+        this replica's dispatch track. The record is kept open for
+        `annotate_step` — the scheduler adds what the runner cannot know
+        (emitted token counts, accept lengths)."""
+        rec = self.span(DISPATCH_TID, kind, "dispatch", t0, t1, **args)
+        self._last_step[0] = rec
+        return rec
+
+    def annotate_step(self, **args) -> None:
+        rec = self._last_step[0]
+        if rec is not None:
+            rec["args"].update(args)
+
+    # -- SchedulerStats time series --------------------------------------
+
+    def sample_stats(self, t: float, stats) -> None:
+        """Record occupancy gauges from a SchedulerStats snapshot and,
+        subject to `sample_interval` throttling, append a time-series
+        sample — the feed an SLO autoscaler consumes."""
+        self.gauge("queue_depth_gauge").set(stats.queue_depth)
+        self.gauge("active_slots_gauge").set(stats.active_slots)
+        self.gauge("blocks_free_gauge").set(stats.free_blocks)
+        self.gauge("blocks_cached_gauge").set(stats.cached_blocks)
+        self.gauge("blocks_reserved_gauge").set(stats.reserved_blocks)
+        last = self._last_sample[0]
+        if last is not None and t - last < self.sample_interval:
+            return
+        self._last_sample[0] = t
+        self.registry.series.append({
+            "t": t, "replica": self.replica,
+            "queue_depth": stats.queue_depth,
+            "active_slots": stats.active_slots,
+            "free_slots": stats.free_slots,
+            "free_blocks": stats.free_blocks,
+            "cached_blocks": stats.cached_blocks,
+            "reserved_blocks": stats.reserved_blocks,
+        })
+
+    # -- lifecycle -------------------------------------------------------
+
+    def begin_run(self) -> None:
+        """Per-run reset (mirrors the engine's telemetry semantics):
+        drop trace data and zero instruments, keeping instrument
+        references valid. Shared storage resets once even when every
+        replica's begin_run calls it."""
+        self.registry.reset()
+        self.spans.clear()
+        self.instants.clear()
+        self.asyncs.clear()
+        self._last_sample[0] = None
+        self._last_step[0] = None
+
+
+class _NullObservability(Observability):
+    """The zero-cost default: `enabled` is False (layers skip their
+    bookkeeping) and every method is a no-op, so an unguarded call
+    costs one dynamic dispatch and records nothing."""
+
+    enabled = False
+
+    def __init__(self):  # no storage at all
+        pass
+
+    def scoped(self, replica: int) -> "Observability":
+        return self
+
+    def counter(self, name: str, **labels):
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name: str, **labels):
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name: str, bounds: Sequence[float], **labels):
+        return _NULL_INSTRUMENT
+
+    def span(self, *a, **k):
+        return {}
+
+    def instant(self, *a, **k):
+        pass
+
+    def async_span(self, *a, **k):
+        pass
+
+    def step(self, *a, **k):
+        return {}
+
+    def annotate_step(self, **k):
+        pass
+
+    def sample_stats(self, *a, **k):
+        pass
+
+    def begin_run(self) -> None:
+        pass
+
+
+NULL_OBS = _NullObservability()
+
+
+# ----------------------------------------------------------------------------
+# exporters
+# ----------------------------------------------------------------------------
+
+def _us(t: float) -> float:
+    return round(t * 1e6, 3)
+
+
+def to_perfetto(obs: Observability) -> Dict[str, Any]:
+    """Render the recorded trace as a Chrome/Perfetto `trace_event`
+    document: one process per replica (pid), one thread per slot track
+    plus the dispatch track (tid), complete ("X") spans for slot
+    residency / lifecycle phases / dispatches, async ("b"/"e") spans
+    for queue residency, and metadata naming every track. Timestamps
+    are microseconds on the shared run clock."""
+    events: List[Dict[str, Any]] = []
+    tracks = set()
+    for s in obs.spans:
+        tracks.add((s["pid"], s["tid"]))
+        events.append({"name": s["name"], "cat": s["cat"], "ph": "X",
+                       "ts": _us(s["t0"]),
+                       "dur": max(_us(s["t1"]) - _us(s["t0"]), 0.0),
+                       "pid": s["pid"], "tid": s["tid"],
+                       "args": s["args"]})
+    for i in obs.instants:
+        tracks.add((i["pid"], i["tid"]))
+        events.append({"name": i["name"], "cat": i["cat"], "ph": "i",
+                       "ts": _us(i["t"]), "s": "t", "pid": i["pid"],
+                       "tid": i["tid"], "args": i["args"]})
+    for a in obs.asyncs:
+        base = {"name": a["name"], "cat": a["cat"],
+                "id": str(a["id"]), "pid": a["pid"], "tid": 0}
+        events.append({**base, "ph": "b", "ts": _us(a["t0"]),
+                       "args": a["args"]})
+        events.append({**base, "ph": "e", "ts": _us(a["t1"])})
+    for pid in sorted({p for p, _ in tracks} | {a["pid"]
+                                                for a in obs.asyncs}):
+        events.append({"name": "process_name", "ph": "M", "pid": pid,
+                       "tid": 0, "args": {"name": f"replica {pid}"}})
+    for pid, tid in sorted(tracks):
+        name = "dispatch" if tid == DISPATCH_TID else f"slot {tid}"
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": name}})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"schema": TRACE_SCHEMA}}
+
+
+def metrics_dump(obs: Observability) -> Dict[str, Any]:
+    """The registry (plus time series) as a schema-versioned document."""
+    doc = {"schema": METRICS_SCHEMA}
+    doc.update(obs.registry.to_dict())
+    return doc
+
+
+def export_trace(obs: Observability, path: str) -> Dict[str, Any]:
+    doc = to_perfetto(obs)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return doc
+
+
+def export_metrics(obs: Observability, path: str) -> Dict[str, Any]:
+    doc = metrics_dump(obs)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
+# ----------------------------------------------------------------------------
+# schema validation (the CI gate)
+# ----------------------------------------------------------------------------
+
+def validate_trace_events(doc: Any) -> List[str]:
+    """Errors that would make `doc` invalid Chrome trace_event JSON
+    (empty list = loads in Perfetto). Checks the envelope, per-phase
+    required fields, and numeric/orderable timestamps."""
+    errs: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document must be an object with a traceEvents list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents must be a list"]
+    open_async: Dict[tuple, int] = {}
+    for n, ev in enumerate(events):
+        where = f"traceEvents[{n}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errs.append(f"{where}: missing ph")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"{where}: missing name")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errs.append(f"{where}: missing integer {key}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errs.append(f"{where}: ph={ph} needs a non-negative ts")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"{where}: complete event needs dur >= 0")
+        elif ph in ("b", "e"):
+            if not isinstance(ev.get("id"), str):
+                errs.append(f"{where}: async event needs a string id")
+            else:
+                key = (ev.get("cat"), ev["id"], ev.get("pid"))
+                open_async[key] = open_async.get(key, 0) + (
+                    1 if ph == "b" else -1)
+                if open_async[key] < 0:
+                    errs.append(f"{where}: async end without begin "
+                                f"for id {ev['id']}")
+        elif ph == "i":
+            if ev.get("s") not in (None, "t", "p", "g"):
+                errs.append(f"{where}: instant scope must be t/p/g")
+        elif ph not in ("B", "E", "C"):
+            errs.append(f"{where}: unsupported phase {ph!r}")
+    for key, depth in open_async.items():
+        if depth != 0:
+            errs.append(f"async span id {key[1]} left open")
+    return errs
+
+
+def validate_metrics_dump(doc: Any) -> List[str]:
+    """Errors that would make `doc` an invalid metrics dump (empty list
+    = valid against METRICS_SCHEMA)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document must be an object"]
+    if doc.get("schema") != METRICS_SCHEMA:
+        errs.append(f"schema must be {METRICS_SCHEMA!r}, "
+                    f"got {doc.get('schema')!r}")
+    for section in ("counters", "gauges", "histograms", "series"):
+        if not isinstance(doc.get(section), list):
+            errs.append(f"{section} must be a list")
+    for kind in ("counters", "gauges"):
+        for n, row in enumerate(doc.get(kind) or []):
+            if not (isinstance(row, dict) and isinstance(row.get("name"),
+                                                         str)
+                    and isinstance(row.get("labels"), dict)
+                    and isinstance(row.get("value"), (int, float))):
+                errs.append(f"{kind}[{n}]: needs name/labels/value")
+    for n, row in enumerate(doc.get("histograms") or []):
+        if not (isinstance(row, dict) and isinstance(row.get("name"), str)
+                and isinstance(row.get("labels"), dict)):
+            errs.append(f"histograms[{n}]: needs name/labels")
+            continue
+        bounds, counts = row.get("bounds"), row.get("counts")
+        if not (isinstance(bounds, list) and isinstance(counts, list)
+                and len(counts) == len(bounds) + 1):
+            errs.append(f"histograms[{n}]: counts must have "
+                        f"len(bounds) + 1 buckets")
+        if not isinstance(row.get("count"), int):
+            errs.append(f"histograms[{n}]: needs an integer count")
+    for n, row in enumerate(doc.get("series") or []):
+        if not (isinstance(row, dict)
+                and isinstance(row.get("t"), (int, float))):
+            errs.append(f"series[{n}]: needs a numeric t")
+    return errs

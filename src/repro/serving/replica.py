@@ -39,6 +39,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serving.engine import ServingEngine
+from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.scheduler import Completion, Request, SchedulerStats
 
 
@@ -87,10 +88,15 @@ class Replica:
     keyword arguments pass through to `ServingEngine`."""
 
     def __init__(self, params, cfg, *, replica_id: int = 0,
-                 **engine_kwargs):
+                 obs: Observability = NULL_OBS, **engine_kwargs):
         self.replica_id = replica_id
         self.enabled = True
-        self.engine = ServingEngine(params, cfg, **engine_kwargs)
+        # each replica publishes through a view of the shared recorder
+        # scoped to its id: replica-labeled instruments, pid=replica_id
+        # tracks in the exported trace
+        self.engine = ServingEngine(
+            params, cfg, obs=(obs or NULL_OBS).scoped(replica_id),
+            **engine_kwargs)
         self.placed = 0               # requests currently owned (net of
         #                               drained requeues) — telemetry
 

@@ -70,6 +70,7 @@ from collections import OrderedDict, deque
 from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.serving.engine import summarize
+from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.replica import Replica
 from repro.serving.scheduler import Completion, Request, StreamEvent
 
@@ -107,7 +108,8 @@ class Router:
     def __init__(self, replicas: Sequence[Replica], *,
                  policy: str = "least-loaded",
                  max_queue: Optional[int] = None,
-                 jump_window: Optional[int] = None):
+                 jump_window: Optional[int] = None,
+                 obs: Observability = NULL_OBS):
         if not replicas:
             raise ValueError("router needs at least one replica")
         ids = [r.replica_id for r in replicas]
@@ -139,6 +141,18 @@ class Router:
         self._probe_memo: Dict[int, Tuple[int, Dict[int, int]]] = {}
         self.requeued = 0                      # drained/failed-over
         self.wall_time = 0.0
+        self._obs = obs or NULL_OBS
+        self._t0: Optional[float] = None       # cluster clock origin
+        self._c_placed = {
+            r.replica_id: self._obs.counter("router_placed_total",
+                                            replica=r.replica_id)
+            for r in self.replicas}
+        self._c_requeued = self._obs.counter("router_requeued_total")
+
+    def _now(self) -> float:
+        """Seconds on the cluster clock (0.0 before the first run)."""
+        return (time.perf_counter() - self._t0
+                if self._t0 is not None else 0.0)
 
     # ------------------------------------------------------------------
     # queue + placement
@@ -146,6 +160,10 @@ class Router:
 
     def submit(self, req: Request) -> None:
         """Enqueue on the CLUSTER queue (placement happens in place())."""
+        if self._obs.enabled:
+            if req.trace is None:
+                req.trace = {}
+            req.trace.setdefault("queued", self._now())
         self._queue.append(req)
 
     @property
@@ -280,6 +298,11 @@ class Router:
                 break                     # everything in-window is held
             i, req, rep = target
             del self._queue[i]
+            if self._obs.enabled:
+                if req.trace is None:
+                    req.trace = {}
+                req.trace["routed"] = self._now()
+            self._c_placed[rep.replica_id].inc()
             rep.submit(req)
             self._placement[req.rid] = rep.replica_id
             self._probe_memo.pop(req.rid, None)
@@ -306,6 +329,7 @@ class Router:
             self._queue.appendleft(r)
             self._placement.pop(r.rid, None)
         self.requeued += len(orphans)
+        self._c_requeued.inc(len(orphans))
         return orphans
 
     def enable(self, replica_id: int) -> None:
@@ -324,6 +348,7 @@ class Router:
         pending = sorted(requests, key=lambda r: r.arrival)
         idx = 0
         t0 = time.perf_counter()
+        self._t0 = t0
         # per-run state resets; the cluster queue is NOT cleared —
         # requests already submit()ed directly keep their place and
         # drain with this run (matching ServingEngine.run semantics)

@@ -49,7 +49,7 @@ assertions).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,7 @@ from repro.serving.block_manager import NULL_BLOCK
 from repro.serving.bucketing import (chain_buckets, next_pow2,  # noqa: F401
                                      normalize_buckets, pick_bucket,
                                      width_buckets)
+from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.sampling import GREEDY, SamplingParams
 
 RECURRENT_KINDS = ("rwkv", "rec")
@@ -94,8 +95,22 @@ class ModelRunner:
                  block_size: int, num_blocks: int, max_blocks_per_seq: int,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4, speculate: int = 0,
-                 max_logprobs: int = 8):
+                 max_logprobs: int = 8, obs: Observability = NULL_OBS,
+                 now_fn: Optional[Callable[[], float]] = None):
         self.cfg = cfg
+        self._obs = obs or NULL_OBS
+        self._now = now_fn or (lambda: 0.0)
+        # dispatch counters resolved once (no-ops when obs is off)
+        self._c_prefill = self._obs.counter("prefill_dispatches_total")
+        self._c_decode = self._obs.counter("decode_dispatches_total")
+        self._c_verify = self._obs.counter("verify_dispatches_total")
+        self._c_copies = self._obs.counter("block_copies_total")
+        # compiled-variant sets: a dispatch whose (bucket, static args)
+        # combination is unseen triggers a jit compile — the trace flags
+        # it `first_dispatch` so compile stalls are attributable
+        self._prefill_variants: set = set()
+        self._decode_variants: set = set()
+        self._verify_variants: set = set()
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -293,6 +308,8 @@ class ModelRunner:
         float32 logprobs) of the top alternatives at each row's last
         prompt position."""
         n = len(rows)
+        obs = self._obs
+        t0 = self._now() if obs.enabled else 0.0
         ls = self.suffix_bucket(max(r.suffix_len for r in rows))
         width = pick_bucket(n, self.width_buckets)
         toks = np.zeros((width, ls), np.int32)
@@ -330,8 +347,20 @@ class ModelRunner:
             last, jnp.asarray(np.maximum(lengths - 1, 0)),
             jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
             jnp.asarray(seeds), do_sample, want_alt)
-        return (np.asarray(first, np.int32)[:n],
-                np.asarray(lp, np.float32)[:n], self._host_alt(alt, n))
+        out = (np.asarray(first, np.int32)[:n],
+               np.asarray(lp, np.float32)[:n], self._host_alt(alt, n))
+        if obs.enabled:
+            variant = (width, ls, do_sample, want_alt)
+            self._c_prefill.inc()
+            obs.step("prefill", t0, self._now(), batch=n,
+                     bucket=[width, ls],
+                     first_dispatch=variant not in self._prefill_variants,
+                     emitted=n,
+                     computed_tokens=sum(r.suffix_len for r in rows),
+                     padded_tokens=width * ls,
+                     cached_tokens=sum(r.start for r in rows))
+            self._prefill_variants.add(variant)
+        return out
 
     @staticmethod
     def _host_alt(alt, n: Optional[int] = None):
@@ -348,15 +377,26 @@ class ModelRunner:
         next tokens, (num_slots,) float32 chosen logprobs, alt — None
         or the top-max_logprobs ((num_slots, K) ids, (num_slots, K)
         logprobs) when any live slot asked for alternatives)."""
+        obs = self._obs
+        t0 = self._now() if obs.enabled else 0.0
         do_sample = self.any_sampled
         if do_sample:
             self.sampled_dispatches += 1
+        want_alt = self.any_alt
         temps, topks, topps, seeds = self._sampling_device()
         next_tok, lp, alt, self.state = self._decode_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
             self._tables_device(), temps, topks, topps, seeds, do_sample,
-            self.any_alt)
-        return np.asarray(next_tok), np.asarray(lp), self._host_alt(alt)
+            want_alt)
+        out = np.asarray(next_tok), np.asarray(lp), self._host_alt(alt)
+        if obs.enabled:
+            variant = (do_sample, want_alt)
+            self._c_decode.inc()
+            obs.step("decode", t0, self._now(), batch=self.num_slots,
+                     first_dispatch=variant not in self._decode_variants,
+                     sampled=do_sample)
+            self._decode_variants.add(variant)
+        return out
 
     def verify(self, tokens: np.ndarray, positions: np.ndarray,
                counts: np.ndarray):
@@ -373,6 +413,8 @@ class ModelRunner:
         accept/reject with residual resampling (serving/sampling.py).
         Recurrent snapshots are held until the matching `commit`."""
         T = tokens.shape[1]
+        obs = self._obs
+        t0 = self._now() if obs.enabled else 0.0
         self.verify_shapes.add(T)
         self.verify_dispatches += 1
         self.verify_padded_tokens += tokens.shape[0] * T
@@ -380,13 +422,25 @@ class ModelRunner:
         do_sample = self.any_sampled
         if do_sample:
             self.sampled_dispatches += 1
+        want_alt = self.any_alt
         temps, topks, topps, seeds = self._sampling_device()
         emit, accept, lp, alt, self.state, self._snaps = self._verify_fn(
             self.state, jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(counts), self._tables_device(), temps, topks,
-            topps, seeds, do_sample, self.any_alt)
-        return (np.asarray(emit), np.asarray(accept), np.asarray(lp),
-                self._host_alt(alt))
+            topps, seeds, do_sample, want_alt)
+        out = (np.asarray(emit), np.asarray(accept), np.asarray(lp),
+               self._host_alt(alt))
+        if obs.enabled:
+            variant = (T, do_sample, want_alt)
+            self._c_verify.inc()
+            obs.step("verify", t0, self._now(), batch=tokens.shape[0],
+                     bucket=T,
+                     first_dispatch=variant not in self._verify_variants,
+                     chain_tokens=int(counts.sum()),
+                     padded_tokens=tokens.shape[0] * T,
+                     sampled=do_sample)
+            self._verify_variants.add(variant)
+        return out
 
     def commit(self, idx: np.ndarray) -> None:
         """Commit per-lane recurrent state at `idx` accepted chain
@@ -404,3 +458,4 @@ class ModelRunner:
         self.state = self._copy_fn(self.state, jnp.int32(src),
                                    jnp.int32(dst))
         self.block_copies += 1
+        self._c_copies.inc()

@@ -66,6 +66,7 @@ import numpy as np
 from repro.serving.block_manager import (NULL_BLOCK, BlockAllocator,
                                          PrefixMatch)
 from repro.serving.draft import make_proposer
+from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.runner import ModelRunner, PrefillRow
 from repro.serving.sampling import SamplingParams, resolve
 
@@ -83,6 +84,11 @@ class Request:
     arrival: float = 0.0          # seconds on the engine clock (open loop)
     eos_id: Optional[int] = None
     sampling: Optional[SamplingParams] = None
+    trace: Optional[Dict[str, float]] = None
+    # lifecycle timestamps on the shared run clock, stamped only while
+    # observability tracing is on (router stamps 'queued'/'routed', the
+    # scheduler stamps 'queued' for un-routed requests); None by default
+    # so the recorder-off path carries no per-request cost
 
 
 @dataclasses.dataclass
@@ -189,9 +195,22 @@ class Scheduler:
                  max_seq_len: int, prefix_cache: bool,
                  now_fn: Callable[[], float], speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3,
-                 default_sampling: Optional[SamplingParams] = None):
+                 default_sampling: Optional[SamplingParams] = None,
+                 obs: Observability = NULL_OBS):
         self.allocator = allocator
         self.runner = runner
+        self._obs = obs or NULL_OBS
+        # instruments resolved once (no-ops when obs is off)
+        self._c_submitted = self._obs.counter("scheduler_submitted_total")
+        self._c_admitted = self._obs.counter("scheduler_admitted_total")
+        self._c_finished = {
+            r: self._obs.counter("scheduler_finished_total", reason=r)
+            for r in ("length", "stop")}
+        self._c_tokens = self._obs.counter("tokens_emitted_total")
+        self._c_prompt = self._obs.counter("prompt_tokens_total")
+        self._c_cached = self._obs.counter("cached_prompt_tokens_total")
+        self._c_proposed = self._obs.counter("spec_proposed_total")
+        self._c_accepted = self._obs.counter("spec_accepted_total")
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -205,6 +224,25 @@ class Scheduler:
         # stateful draft-model proposer will need
         self._proposers = [make_proposer(draft, ngram=ngram)
                            for _ in range(num_slots)] if speculate else []
+        # per-slot acceptance telemetry (the signal ROADMAP's adaptive
+        # speculation length will steer by — recorded, not acted on):
+        # an accept-length histogram per slot plus a rolling acceptance
+        # rate over the last `_accept_window` verify dispatches
+        if self.speculate and self._obs.enabled:
+            bounds = list(range(self.speculate + 1))
+            self._h_accept = self._obs.histogram("verify_accept_len_hist",
+                                                 bounds)
+            self._h_accept_slot = [
+                self._obs.histogram("verify_accept_len_hist", bounds,
+                                    slot=i) for i in range(num_slots)]
+            self._g_accept_rate = [
+                self._obs.gauge("spec_accept_rate", slot=i)
+                for i in range(num_slots)]
+            self._accept_window = [deque(maxlen=32)
+                                   for _ in range(num_slots)]
+        else:
+            self._accept_window = []
+        self._last_proposed: Dict[int, int] = {}
         self._queue: Deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._reserved_budget = 0     # sum of live slots' budgets
@@ -249,6 +287,11 @@ class Scheduler:
             self.greedy_requests += 1
         else:
             self.sampled_requests += 1
+        if self._obs.enabled:
+            self._c_submitted.inc()
+            if req.trace is None:
+                req.trace = {}
+            req.trace.setdefault("queued", self._now())
         self._queue.append(req)
 
     @property
@@ -267,6 +310,18 @@ class Scheduler:
             cached_blocks=self.allocator.num_cached,
             indexed_blocks=self.allocator.num_indexed,
             reserved_blocks=self._reserved_budget)
+
+    def slot_acceptance_rates(self) -> List[Optional[float]]:
+        """Rolling per-slot draft acceptance rate (accepted/proposed over
+        the last 32 verify dispatches), None for slots with no verify
+        history yet. The signal an adaptive speculation-length policy
+        would consume; requires observability to be on."""
+        out: List[Optional[float]] = [None] * self.num_slots
+        for i, win in enumerate(self._accept_window):
+            prop = sum(p for p, _ in win)
+            if prop > 0:
+                out[i] = sum(a for _, a in win) / prop
+        return out
 
     def take_queued(self) -> List[Request]:
         """Pull every queued-but-unadmitted request out of the queue, in
@@ -347,6 +402,8 @@ class Scheduler:
         self._reserved_budget += budget
         self.prompt_tokens += P
         self.cached_prompt_tokens += min(cached, P - 1)
+        self._c_prompt.inc(P)
+        self._c_cached.inc(min(cached, P - 1))
         if cached > 0:
             self.prefix_hit_requests += 1
             self.allocator.touch(match.full_blocks)
@@ -424,6 +481,7 @@ class Scheduler:
                            sampling=p.req.sampling) for p in plans]
         first, lp, alt = self.runner.prefill(rows)  # blocks: TTFT covers it
         t_first = self._now()
+        self._c_admitted.inc(len(plans))
         for i, (p, tok, tok_lp) in enumerate(zip(plans, first, lp)):
             P = len(p.req.prompt)
             sp = p.req.sampling
@@ -479,6 +537,7 @@ class Scheduler:
         request asked, and fire the streaming callback."""
         s.out.extend(tokens)
         s.hist.extend(tokens)
+        self._c_tokens.inc(len(tokens))
         if s.lps is not None and lps is not None:
             s.lps.extend(lps)
         have_alt = s.alts is not None and alts is not None
@@ -597,6 +656,9 @@ class Scheduler:
                 lp: Optional[np.ndarray] = None, alt=None) -> None:
         """Advance each active lane with its sampled token; finish and
         evict lanes that hit max_new_tokens or a stop sequence."""
+        if self._obs.enabled:
+            self._obs.annotate_step(active=len(active),
+                                    emitted=len(active))
         for i in active:
             s = self._slots[i]
             tok = int(next_tok[i])
@@ -650,6 +712,9 @@ class Scheduler:
             positions[i] = s.pos
             counts[i] = len(chain)
             self.proposed_tokens += len(drafts[i])
+            self._c_proposed.inc(len(drafts[i]))
+        if self._obs.enabled:
+            self._last_proposed = {i: len(drafts[i]) for i in active}
         return tokens, positions, counts, active
 
     def consume_verify(self, active: List[int], out_tok: np.ndarray,
@@ -682,7 +747,23 @@ class Scheduler:
             commit_idx[i] = len(emitted)
             # accepted = drafts that actually materialized as output
             # (drafts agreeing past a truncating stop don't count)
-            self.accepted_tokens += len(emitted) - 1
+            acc = len(emitted) - 1
+            self.accepted_tokens += acc
+            self._c_accepted.inc(acc)
+            if self._obs.enabled and self._accept_window:
+                self._h_accept.observe(acc)
+                self._h_accept_slot[i].observe(acc)
+                win = self._accept_window[i]
+                win.append((self._last_proposed.get(i, 0), acc))
+                prop_sum = sum(p for p, _ in win)
+                if prop_sum > 0:
+                    self._g_accept_rate[i].set(
+                        sum(a for _, a in win) / prop_sum)
+        if self._obs.enabled:
+            self._obs.annotate_step(
+                active=len(active),
+                emitted=sum(len(plan[i][0]) for i in active),
+                accept_lens=[len(plan[i][0]) - 1 for i in active])
         # restore recurrent slot state at each lane's accepted
         # (stop-truncated) length BEFORE host bookkeeping (a no-op for
         # pure-attention archs)
@@ -723,6 +804,25 @@ class Scheduler:
             top_logprobs=(np.asarray([a[1] for a in s.alts], np.float32)
                           if s.alts is not None else None))
         self.completions.append(completion)
+        self._c_finished[completion.finish_reason].inc()
+        if self._obs.enabled:
+            trace = s.req.trace or {}
+            t_q = trace.get("queued", s.req.arrival)
+            rid = completion.rid
+            self._obs.async_span(
+                f"req {rid} queued", "queue", rid, t_q, s.t_admit,
+                routed="routed" in trace)
+            self._obs.span(
+                slot_id, f"req {rid}", "request", s.t_admit,
+                completion.t_done, rid=rid,
+                prompt_len=completion.prompt_len,
+                cached_tokens=completion.cached_tokens,
+                generated=len(completion.tokens),
+                finish_reason=completion.finish_reason)
+            self._obs.span(slot_id, "prefill", "phase",
+                           s.t_admit, s.t_first)
+            self._obs.span(slot_id, "decode", "phase",
+                           s.t_first, completion.t_done)
         for b in s.table_row:
             if b != NULL_BLOCK:
                 self.allocator.decref(int(b))
