@@ -87,7 +87,8 @@ from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
 from repro.serving.bucketing import pick_bucket
-from repro.serving.engine import (ServingEngine, multi_tenant_requests,
+from repro.serving.engine import (ServingEngine, long_document_requests,
+                                  multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
@@ -280,12 +281,94 @@ def _check_batch_invariance(engine, reqs, done, probes=2) -> bool:
     return True
 
 
+def _run_long_context(args) -> dict:
+    """Prompt-length-scaling arm (--workload long-context): one long-
+    document request per length, admitted through chunked prefill. Per
+    length the record keeps TTFT, the number of prefill chunk
+    dispatches, and the analytic peak score-tile bytes of the largest
+    dispatch — the quantity chunked admission + streamed attention
+    bound. Gates: (a) greedy output at the identity length is
+    bit-identical to unchunked generate(); (b) peak score bytes are
+    FLAT across every chunked length (memory does not grow with the
+    prompt once the chunk budget is hit). The seed baseline is skipped:
+    token-by-token priming of a 32k prompt is not a comparison, it is a
+    timeout."""
+    cfg = get_config(args.arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lengths = args.lengths or [1024, 2048, 4096, 8192, 16384, 32768]
+    chunk = args.prefill_chunk or 1024
+    if args.smoke:
+        lengths = args.lengths or [128, 256, 512]
+        chunk = min(chunk, 64)
+    max_new = 4
+    slots = min(args.slots, 2)    # single-stream arm: keep the pool small
+    ident_len = (lengths[-1] if args.smoke
+                 else (16384 if 16384 in lengths else lengths[-1]))
+    rows = []
+    ident_ok = None
+    budget = None
+    for L in lengths:
+        reqs = long_document_requests(
+            1, vocab_size=cfg.vocab_size, prompt_len=L,
+            max_new=(max_new, max_new), seed=args.seed)
+        engine = ServingEngine(params, cfg, num_slots=slots,
+                               block_size=args.block_size,
+                               max_seq_len=L + max_new + 1,
+                               prefill_chunk=chunk)
+        budget = engine.runner.prefill_chunk
+        engine.run(list(reqs))    # warm jit on this length's shapes
+        engine.reset_prefix_cache()
+        done = engine.run(list(reqs))
+        stats = summarize(done, engine.wall_time, engine)
+        rows.append({
+            "prompt_len": L,
+            "ttft_ms": stats["ttft_p50_ms"],
+            "chunks": stats["prefill"]["dispatches"],
+            "peak_score_bytes": stats["prefill"]["peak_score_bytes"],
+            "tokens_per_s": stats["tokens_per_s"],
+        })
+        print(f"long_context_{L},{stats['ttft_p50_ms']},ms TTFT "
+              f"({rows[-1]['chunks']} chunks, "
+              f"{rows[-1]['peak_score_bytes']} peak score bytes)")
+        if L == ident_len:
+            exp = np.asarray(generate(params, cfg,
+                                      np.asarray(reqs[0].prompt)[None],
+                                      max_new))[0]
+            ident_ok = bool(np.array_equal(done[0].tokens, exp))
+            print(f"long_context_identity,{ident_ok},"
+                  f"chunked vs generate() at {L} tokens")
+    chunked_rows = [r for r in rows if r["prompt_len"] > budget]
+    flat = (len({r["peak_score_bytes"] for r in chunked_rows}) <= 1)
+    print(f"long_context_peak_flat,{flat},"
+          f"score bytes across chunked lengths > {budget}")
+    assert ident_ok, "chunked admission changed greedy output"
+    assert flat, "peak score bytes grew with prompt length"
+    record = {
+        "meta": _run_meta(args),
+        "arch": args.arch,
+        "workload": "long-context",
+        "prefill_chunk": budget,
+        "max_new": max_new,
+        "slots": slots,
+        "block_size": args.block_size,
+        "scaling": rows,
+        "identity": {"prompt_len": ident_len, "greedy_identical": ident_ok},
+        "peak_score_flat_past_chunk": flat,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"bench_{args.arch}_long-context.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {path}")
+    return record
+
+
 def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--workload", default="uniform",
                     choices=["uniform", "mixed", "shared-prefix",
-                             "multi-tenant", "repetitive"])
+                             "multi-tenant", "repetitive", "long-context"])
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, nargs="+", default=[256])
     ap.add_argument("--prefix-len", type=int, default=192,
@@ -307,6 +390,12 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-batch", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-admission budget for the long-context "
+                         "arm (default 1024; smoke caps it at 64)")
+    ap.add_argument("--lengths", type=int, nargs="+", default=None,
+                    help="prompt lengths for the long-context scaling "
+                         "sweep (default 1024..32768 doubling)")
     ap.add_argument("--speculate", type=int, default=0,
                     help="n-gram speculative-decoding arm with K drafts")
     ap.add_argument("--draft", default="ngram", choices=["ngram"])
@@ -322,6 +411,11 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
                          "and assert acceptance > 0 + greedy identity")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args(argv)
+
+    if args.workload == "long-context":
+        # its own arm: scaling sweep + identity/memory gates, no seed
+        # baseline, and none of the smoke-mode workload rewrites below
+        return _run_long_context(args)
 
     if args.smoke and args.replicas > 1:
         # the 2-replica router gate: multi-tenant traffic (the workload

@@ -22,6 +22,12 @@
 #                              # exports are schema-validated, and the
 #                              # bench obs arm asserts outputs stay
 #                              # bit-identical with tracing enabled
+#                              # + the long-context smoke (chunked
+#                              # admission identity + flat peak score
+#                              # bytes) + the uniform-workload
+#                              # regression gate: a fresh smoke-sized
+#                              # uniform bench diffed against the
+#                              # committed record via bench_compare
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -58,6 +64,21 @@ PY
            python benchmarks/serving_bench.py --workload repetitive \
                 --smoke --seed 0 --temperature 0.8 --top-k 2 \
                 --out "$(mktemp -d)"
+           # long-context smoke: chunked admission bit-identity to
+           # generate() + peak score bytes flat past the chunk budget
+           python benchmarks/serving_bench.py --workload long-context \
+                --smoke --seed 0 --out "$(mktemp -d)"
+           # uniform regression gate: rerun the committed record's
+           # exact workload and diff throughput/latency against it
+           # (generous threshold — shared CI boxes are noisy; it
+           # catches collapses, not jitter)
+           cmp_dir="$(mktemp -d)"
+           python benchmarks/serving_bench.py --workload uniform \
+                --seed 0 --out "$cmp_dir"
+           python scripts/bench_compare.py \
+                experiments/serving/bench_smollm-135m_uniform.json \
+                "$cmp_dir/bench_smollm-135m_uniform.json" \
+                --threshold 0.5
            exec python benchmarks/serving_bench.py \
                 --workload multi-tenant --smoke --replicas 2 --seed 0 \
                 --out "$(mktemp -d)" ;;

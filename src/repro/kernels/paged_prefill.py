@@ -1,0 +1,146 @@
+"""Chunk-parallel paged suffix-prefill attention (online softmax), TPU Pallas.
+
+Suffix prefill for serving: each row's queries are a bucket-padded prompt
+suffix whose KV cache prefix lives in fixed-size physical blocks of a
+shared pool, mapped through a per-row block table. Queries attend to the
+cached prefix (pool positions < starts[n]) plus the fresh suffix causally
+— exactly `attention.streamed_paged_attention`, which is this kernel's
+interpret-mode oracle.
+
+Grid: (N, KV, Ls/bq, M + Ls/bs) with the key axis innermost ("arbitrary"
+semantics — sequential per (row, kv_head, q-tile), carrying online-softmax
+stats in VMEM scratch). The first M key steps stream physical pool blocks
+gathered through the scalar-prefetched block table (skipped once past the
+cached prefix); the remaining Ls/bs steps stream the fresh suffix K/V
+tiles (skipped strictly above the causal diagonal). Only a
+(group*bq, bs) score tile ever materializes — peak score memory is
+independent of both the prompt length and the block-table bound M.
+
+GQA: queries are laid out (N, KV, group, Ls, hd); each step contracts the
+whole (group, bq) query tile against one (bs, hd) K/V tile, with kv_head
+indexing in the BlockSpec maps like kernels/paged_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, st_ref, ln_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, scale, bs, bq, M, window):
+    n = pl.program_id(0)
+    qi = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    st = st_ref[n]
+    ln = ln_ref[n]
+    is_pool = j < M
+    js = j - M                       # suffix tile index when j >= M
+    # pool blocks are skipped once past the cached prefix; suffix tiles
+    # strictly above the causal diagonal are skipped
+    run = jnp.where(is_pool, j * bs < st, js * bs <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        G = m_ref.shape[0]           # group * bq rows
+        q = q_ref[0, 0].astype(jnp.float32).reshape(G, -1)   # (g*bq, hd)
+        k = jnp.where(is_pool, kp_ref[0, :, 0],
+                      ks_ref[0, :, 0]).astype(jnp.float32)   # (bs, hd)
+        v = jnp.where(is_pool, vp_ref[0, :, 0],
+                      vs_ref[0, :, 0]).astype(jnp.float32)
+        s = (q @ k.T) * scale                                # (g*bq, bs)
+        qrow = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % bq
+        qpos = st + qi * bq + qrow                           # absolute
+        c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        kpos = jnp.where(is_pool, j * bs + c, st + js * bs + c)
+        valid = jnp.where(is_pool, kpos < st,
+                          jnp.logical_and(kpos <= qpos,
+                                          js * bs + c < ln - st))
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > qpos - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        acc = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = acc.reshape(o_ref.shape[2:]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "interpret"))
+def paged_prefill_attention(q, k_suf, v_suf, k_pool, v_pool, block_tables,
+                            starts, lengths, *, window: int = 0,
+                            bq: int = 128, interpret: bool = True):
+    """q: (N, Ls, H, hd) rope'd suffix queries; k_suf/v_suf: (N, Ls, KV, hd)
+    fresh suffix K/V (not yet scattered into the pools); k_pool/v_pool:
+    (P, bs, KV, hd) physical block pools; block_tables: (N, M) int32;
+    starts/lengths: (N,) int32 (rows with lengths == 0 return garbage —
+    mask downstream). Returns (N, Ls, H, hd) in q.dtype."""
+    N, Ls, H, hd = q.shape
+    _, bs, KV, _ = k_pool.shape
+    group = H // KV
+    M = block_tables.shape[1]
+    bq = min(bq, Ls)
+    nq = pl.cdiv(Ls, bq)
+    ns = pl.cdiv(Ls, bs)
+    qg = q.reshape(N, Ls, KV, group, hd).transpose(0, 2, 3, 1, 4)
+
+    def q_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
+        return (n, kv, 0, qi, 0)
+
+    def pool_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
+        return (bt_ref[n, jnp.minimum(j, M - 1)], 0, kv, 0)
+
+    def suf_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
+        return (n, jnp.clip(j - M, 0, ns - 1), kv, 0)
+
+    kernel = functools.partial(_kernel, scale=hd**-0.5, bs=bs, bq=bq,
+                               M=M, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(N, KV, nq, M + ns),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, bq, hd), q_map),
+                pl.BlockSpec((1, bs, 1, hd), pool_map),
+                pl.BlockSpec((1, bs, 1, hd), pool_map),
+                pl.BlockSpec((1, bs, 1, hd), suf_map),
+                pl.BlockSpec((1, bs, 1, hd), suf_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, bq, hd), q_map),
+            scratch_shapes=[
+                # m, l, acc live in VMEM across the key sweep
+                pltpu.VMEM((group * bq, 1), jnp.float32),
+                pltpu.VMEM((group * bq, 1), jnp.float32),
+                pltpu.VMEM((group * bq, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, KV, group, Ls, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(block_tables, starts, lengths, qg, k_pool, v_pool, k_suf, v_suf)
+    return out.transpose(0, 3, 1, 2, 4).reshape(N, Ls, H, hd)

@@ -58,6 +58,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serving.engine import (Request, ServingEngine,
+                                  long_document_requests,
                                   multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
@@ -150,6 +151,11 @@ def _make_workload(args, cfg):
             args.requests, vocab_size=cfg.vocab_size, period=args.period,
             prompt_len=plen, max_new=tuple(args.max_new), rate=rate,
             sampling=sampling, seed=args.seed)
+    if args.workload == "long-document":
+        return long_document_requests(
+            args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
+            max_new=tuple(args.max_new), rate=rate, sampling=sampling,
+            seed=args.seed)
     return synthetic_requests(
         args.requests, vocab_size=cfg.vocab_size, prompt_len=plen,
         max_new=tuple(args.max_new), rate=rate, sampling=sampling,
@@ -161,6 +167,7 @@ def _engine_kwargs(args, max_seq_len):
                 max_seq_len=max_seq_len, prefix_cache=args.prefix_cache,
                 prefill_buckets=args.prefill_buckets,
                 prefill_max_batch=args.prefill_batch,
+                prefill_chunk=args.prefill_chunk,
                 speculate=args.speculate, draft=args.draft,
                 ngram=args.ngram,
                 # widen the compiled top-k side output when the CLI asks
@@ -243,7 +250,7 @@ def main():
                     metavar=("LO", "HI"))
     ap.add_argument("--workload", default="synthetic",
                     choices=["synthetic", "shared-prefix", "multi-tenant",
-                             "repetitive"])
+                             "repetitive", "long-document"])
     ap.add_argument("--prefix-len", type=int, default=48,
                     help="shared system-prompt length (shared-prefix / "
                          "multi-tenant)")
@@ -279,6 +286,12 @@ def main():
                          "(default: powers of two up to max_seq_len)")
     ap.add_argument("--prefill-batch", type=int, default=4,
                     help="max prompts admitted per prefill dispatch")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-admission budget: prompts longer than "
+                         "the largest prefill bucket are admitted in "
+                         "chunks of this many tokens, one per engine "
+                         "step (default 2048; 0 disables — oversized "
+                         "prompts are then rejected at submit)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop arrival rate req/s (<=0: all at t=0)")
     ap.add_argument("--temperature", type=float, default=0.0,

@@ -71,6 +71,13 @@ def chunked_causal_attention(q, k, v, *, chunk: int = 512, window: int = 0,
     window > 0 => local attention (each query sees the last `window` keys).
     prefix_len > 0 => the first prefix_len positions attend bidirectionally
     (prefix-LM for the VLM arch).
+
+    This is the training/single-shot-prefill path (attention_block's
+    default; `cfg.attn_impl == "bisect"` swaps in bisect_causal_attention
+    for long even sequences). The same `cfg.attn_chunk` knob also sets
+    the KV band size of the serving-side streamed paged prefill
+    (streamed_paged_attention / kernels/paged_prefill.py), so one config
+    value bounds score-tile memory on both paths.
     """
     B, S, H, hd = q.shape
     scale = hd ** -0.5
@@ -111,14 +118,18 @@ def chunked_causal_attention(q, k, v, *, chunk: int = 512, window: int = 0,
 # flash kernel's block skipping (EXPERIMENTS.md §Perf).
 # ----------------------------------------------------------------------------
 
-def _attn_stats(q, k, v, scale, causal):
+def _attn_stats(q, k, v, scale, causal, mask=None):
     """Unnormalized flash stats. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd).
+    `mask` (optional) is boolean, broadcastable against (B, 1, Sq, Sk)
+    after the head axis is inserted — True keeps a score.
     Returns m (B,H,Sq), l (B,H,Sq), acc (B,Sq,H,hd) fp32."""
     s = _gqa_scores(q, k) * scale                       # (B,H,Sq,Sk) fp32
     if causal:
         Sq, Sk = s.shape[-2], s.shape[-1]
-        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
-        s = jnp.where(mask[None, None], s, NEG_INF)
+        cmask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(cmask[None, None], s, NEG_INF)
+    if mask is not None:
+        s = jnp.where(mask[:, None], s, NEG_INF)
     m = s.max(-1)
     p = jnp.exp(s - m[..., None])
     l = p.sum(-1)
@@ -228,6 +239,70 @@ def decode_attention_block(params, x, cache, pos, cfg, *, window: int = 0):
 # Paged KV-cache prefill (bucketed batched admission over cached prefixes)
 # ----------------------------------------------------------------------------
 
+def streamed_paged_attention(q, k, v, cache, block_tables, positions,
+                             starts, lengths, *, scale, attn_chunk,
+                             window: int = 0):
+    """Online-softmax suffix-prefill attention over a paged KV cache.
+
+    q: (N, Ls, H, hd) rope'd suffix queries; k/v: (N, Ls, KV, hd) rope'd
+    suffix keys/values (NOT yet scattered into the pools); cache k/v:
+    (P, bs, KV, hd) physical block pools holding the cached prefix;
+    block_tables: (N, M); positions: (N, Ls) absolute query positions;
+    starts/lengths: (N,) — queries attend to pool positions < starts and
+    causally within the suffix (suffix index < lengths - starts).
+
+    The pool is streamed in bands of ceil(attn_chunk / bs) blocks via
+    lax.scan, folding each band into flash running stats (_attn_stats /
+    _merge_stats), so peak score memory is O(N*H*Ls*(attn_chunk + Ls))
+    — never the full O(N*H*Ls*(M*bs + Ls)) dense tensor. Doubles as the
+    interpret-mode oracle for kernels/paged_prefill.py.
+
+    Returns the normalized attention output (N, Ls, H, hd) float32.
+    """
+    N, Ls, H, hd = q.shape
+    bs = cache["k"].shape[1]
+    M = block_tables.shape[1]
+
+    # suffix: fresh q vs fresh k/v, causal within the suffix window
+    i = jnp.arange(Ls)
+    causal = (i[None, :] <= i[:, None])[None]                # (1, Ls, Ls)
+    in_suffix = (i[None, None, :]
+                 < (lengths - starts)[:, None, None])        # (N, 1, Ls)
+    valid_suf = jnp.logical_and(causal, in_suffix)           # (N, Ls, Ls)
+    if window > 0:
+        valid_suf = jnp.logical_and(
+            valid_suf, positions[:, None, :]
+            > positions[:, :, None] - window)
+    suf = _attn_stats(q, k, v, scale, causal=False, mask=valid_suf)
+
+    # cached prefix: stream the block table in fixed-size bands
+    cb = max(1, -(-min(attn_chunk, M * bs) // bs))           # blocks/band
+    nb = -(-M // cb)
+    bt = block_tables
+    if nb * cb > M:   # pad with null blocks (masked: kpos >= starts)
+        bt = jnp.pad(bt, ((0, 0), (0, nb * cb - M)))
+    bt = bt.reshape(N, nb, cb).transpose(1, 0, 2)            # (nb, N, cb)
+
+    def band(stats, inp):
+        bi, btc = inp                                        # btc: (N, cb)
+        gk = cache["k"][btc].reshape(N, cb * bs, *cache["k"].shape[2:])
+        gv = cache["v"][btc].reshape(N, cb * bs, *cache["v"].shape[2:])
+        kpos = bi * cb * bs + jnp.arange(cb * bs)
+        m = (kpos[None, None, :] < starts[:, None, None])    # (N, 1, cb*bs)
+        if window > 0:
+            m = jnp.logical_and(
+                m, kpos[None, None, :] > positions[:, :, None] - window)
+        st = _attn_stats(q, gk, gv, scale, causal=False, mask=m)
+        return _merge_stats(stats, st), None
+
+    init = (jnp.full((N, H, Ls), NEG_INF, jnp.float32),
+            jnp.zeros((N, H, Ls), jnp.float32),
+            jnp.zeros((N, Ls, H, hd), jnp.float32))
+    pre, _ = lax.scan(band, init, (jnp.arange(nb), bt))
+    m, l, acc = _merge_stats(pre, suf)
+    return acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+
+
 def paged_prefill_attention_block(params, x, cache, positions, block_tables,
                                   starts, lengths, cached_lens, cfg, *,
                                   window: int = 0):
@@ -242,44 +317,28 @@ def paged_prefill_attention_block(params, x, cache, positions, block_tables,
     already sits in the sequence's blocks (scatter skips them);
     block_tables: (N, max_blocks); cache k/v: physical block pools.
 
-    Queries attend to the cached prefix (gathered through the block
+    Queries attend to the cached prefix (streamed through the block
     table, masked to kpos < starts) plus the suffix causally; the
     suffix's rope'd K/V is scattered into (table[p // bs], p % bs) for
     cached_lens <= p < lengths — padded and already-cached positions are
-    redirected to the null block. Scores materialize
-    (N, H, Ls, M*bs + Ls) like one decode step per suffix token; chunk
-    Ls upstream for long-prompt memory safety. Returns (out, new_cache).
+    redirected to the null block.
+
+    The cached prefix is NOT gathered densely: a lax.scan walks the
+    block table in bands of ceil(attn_chunk / bs) blocks, folding each
+    band into flash-style online-softmax running stats (_attn_stats /
+    _merge_stats — the same machinery bisect_causal_attention uses), so
+    peak score memory is O(N * H * Ls * (attn_chunk + Ls)) instead of
+    O(N * H * Ls * (M*bs + Ls)). This is the interpret-mode oracle for
+    kernels/paged_prefill.py. Returns (out, new_cache).
     """
     N, Ls, D = x.shape
     q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                    positions, cfg.rope_theta)
     bs = cache["k"].shape[1]
     M = block_tables.shape[1]
-    gk = cache["k"][block_tables].reshape(N, M * bs, *cache["k"].shape[2:])
-    gv = cache["v"][block_tables].reshape(N, M * bs, *cache["v"].shape[2:])
-    s = _gqa_scores(q, jnp.concatenate([gk, k], axis=1))
-    s = s * (cfg.head_dim ** -0.5)              # (N, H, Ls, M*bs + Ls)
-
-    kpos_pre = jnp.arange(M * bs)
-    valid_pre = jnp.broadcast_to(
-        (kpos_pre[None, :] < starts[:, None])[:, None, :], (N, Ls, M * bs))
-    i = jnp.arange(Ls)
-    causal = (i[None, :] <= i[:, None])[None]                # (1, Ls, Ls)
-    in_suffix = (i[None, None, :]
-                 < (lengths - starts)[:, None, None])        # (N, 1, Ls)
-    valid_suf = jnp.broadcast_to(jnp.logical_and(causal, in_suffix),
-                                 (N, Ls, Ls))
-    if window > 0:
-        valid_pre = jnp.logical_and(
-            valid_pre, kpos_pre[None, None, :]
-            > positions[:, :, None] - window)
-        valid_suf = jnp.logical_and(
-            valid_suf, positions[:, None, :]
-            > positions[:, :, None] - window)
-    valid = jnp.concatenate([valid_pre, valid_suf], axis=-1)
-    s = jnp.where(valid[:, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = _gqa_out(p, jnp.concatenate([gv, v], axis=1))
+    o = streamed_paged_attention(q, k, v, cache, block_tables, positions,
+                                 starts, lengths, scale=cfg.head_dim ** -0.5,
+                                 attn_chunk=cfg.attn_chunk, window=window)
     out = (o.reshape(N, Ls, -1) @ params["wo"]).astype(x.dtype)
 
     write = jnp.logical_and(positions >= cached_lens[:, None],

@@ -504,15 +504,19 @@ def _apply_block_step_paged(params, kind: str, x, positions,
 
 def _apply_block_prefill_paged(params, kind: str, x, positions,
                                cfg: ModelConfig, state, block_tables,
-                               starts, lengths, cached_lens, slots):
+                               starts, lengths, cached_lens, slots,
+                               resume: bool = False):
     """Batched suffix-prefill against paged state. x: (N, Ls, D).
 
     Attention layers attend to their cached prefix through the block
     table and scatter the suffix K/V into the pools; recurrent layers
-    run the length-masked sequence form from a fresh state (recurrent
-    archs cannot resume from block-structured caches — the engine
-    forces cached_lens = 0 for them) and scatter final states at the
-    slot indices (out-of-range slots, used for padding rows, drop)."""
+    run the length-masked sequence form and scatter final states at the
+    slot indices (out-of-range slots, used for padding rows, drop).
+    resume=False starts recurrent layers fresh (recurrent archs cannot
+    resume from block-structured caches — the engine forces
+    cached_lens = 0 for them); resume=True (a chunked-prefill
+    continuation) gathers each row's initial recurrent state from its
+    slot, where the previous chunk's dispatch scattered it."""
     if kind in ("attn", "attn_local", "moe"):
         h = rms_norm(x, params["norm1"], cfg.norm_eps)
         window = cfg.window if kind == "attn_local" else 0
@@ -528,9 +532,14 @@ def _apply_block_prefill_paged(params, kind: str, x, positions,
         else:
             x = x + mlp(params["mlp"], h2, cfg.mlp_kind)
         return x, new_cache
-    # rwkv / rec: fresh run over the (whole) prompt, freeze past length
+    # rwkv / rec: run over the chunk, freeze past length
+    init = None
+    if resume:
+        num_slots = jax.tree.leaves(state)[0].shape[0]
+        idx = jnp.clip(slots, 0, num_slots - 1)
+        init = jax.tree.map(lambda s: s[idx], state)
     x, fin, _ = _apply_block_seq(params, kind, x, positions, cfg,
-                                 state=None, lengths=lengths - starts)
+                                 state=init, lengths=lengths - starts)
     new_state = jax.tree.map(
         lambda s, c: s.at[slots].set(c.astype(s.dtype), mode="drop"),
         state, fin)
@@ -538,7 +547,7 @@ def _apply_block_prefill_paged(params, kind: str, x, positions,
 
 
 def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
-                  cached_lens, block_tables, slots):
+                  cached_lens, block_tables, slots, resume: bool = False):
     """Bucketed batched prefill straight into the paged serving state.
 
     tokens: (N, Ls) int32 — row n holds the prompt SUFFIX starting at
@@ -550,7 +559,10 @@ def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
     block_tables: (N, max_blocks) int32; slots: (N,) decode-slot index
     per row (recurrent dense state lands there; pass num_slots to drop,
     e.g. for batch-padding rows, which should also use lengths = 0 and
-    all-null table rows).
+    all-null table rows). resume=True marks a chunked-prefill
+    continuation: recurrent layers pick their initial state up from the
+    slot instead of starting fresh (attention layers resume through
+    cached_lens either way). Must be a static jit argument.
 
     One jitted instance serves every batch whose (N, Ls) matches — the
     scheduler buckets suffix lengths into powers of two precisely so the
@@ -571,7 +583,7 @@ def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
                            state["prefix"]):
         h, st_new = _apply_block_prefill_paged(
             p, kind, h, positions, cfg, st, block_tables, starts, lengths,
-            cached_lens, slots)
+            cached_lens, slots, resume=resume)
         new_prefix.append(st_new)
 
     def superblock(h, xs):
@@ -583,7 +595,7 @@ def prefill_paged(params, cfg: ModelConfig, state, tokens, lengths,
             h, st = _apply_block_prefill_paged(
                 block_params[f"p{pi}"], kind, h, positions, cfg,
                 block_state[f"p{pi}"], block_tables, starts, lengths,
-                cached_lens, slots)
+                cached_lens, slots, resume=resume)
             new_state[f"p{pi}"] = st
         return h, new_state
 

@@ -83,6 +83,13 @@ class ServingEngine:
     prefill_buckets    suffix-length buckets for batched prefill
                        (default: powers of two up to max_seq_len)
     prefill_max_batch  max prompts per prefill dispatch
+    prefill_chunk      chunked-admission budget: a prompt whose suffix
+                       exceeds the largest prefill bucket is admitted
+                       chunk-by-chunk, one `prefill_chunk`-token chunk
+                       per engine step, interleaved with decode so
+                       running lanes aren't starved (None = default
+                       2048, rounded to a bucket; 0 disables — such
+                       prompts are then rejected at submit)
     speculate          max draft tokens per verify dispatch (0 = off);
                        composes with any SamplingParams — greedy lanes
                        use the argmax-compare accept rule (output
@@ -107,7 +114,8 @@ class ServingEngine:
                  seed: Optional[int] = None,
                  prefix_cache: Optional[bool] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 prefill_max_batch: int = 4, speculate: int = 0,
+                 prefill_max_batch: int = 4,
+                 prefill_chunk: Optional[int] = None, speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3,
                  max_logprobs: int = 8,
                  obs: Observability = NULL_OBS):
@@ -151,7 +159,8 @@ class ServingEngine:
             num_blocks=num_blocks,
             max_blocks_per_seq=self.max_blocks_per_seq,
             prefill_buckets=prefill_buckets,
-            prefill_max_batch=prefill_max_batch, speculate=self.speculate,
+            prefill_max_batch=prefill_max_batch,
+            prefill_chunk=prefill_chunk, speculate=self.speculate,
             max_logprobs=max_logprobs, obs=self.obs, now_fn=self._now)
         self.scheduler = Scheduler(
             self.allocator, self.runner, num_slots=num_slots,
@@ -210,8 +219,12 @@ class ServingEngine:
         anything go through one multi-token verify dispatch (propose ->
         verify -> accept/rollback); when nothing was proposed the
         iteration falls back to the plain decode dispatch, so idle
-        proposers cost nothing."""
+        proposers cost nothing. A long prompt mid-chunked-admission
+        advances by exactly one prefill chunk per iteration, BEFORE the
+        decode/verify dispatch, so running lanes keep emitting tokens
+        throughout a long admission instead of stalling behind it."""
         self.scheduler.admit()
+        self.scheduler.prefill_step()
         if self.obs.enabled:
             # occupancy time series (sampled post-admission so queue
             # depth and slot occupancy reflect this step's batch)
@@ -403,6 +416,32 @@ def multi_tenant_requests(n: int, *, vocab_size: int, n_tenants: int = 4,
     return out
 
 
+def long_document_requests(n: int, *, vocab_size: int,
+                           prompt_len: Union[int, Tuple[int, int]] = 4096,
+                           max_new: tuple = (4, 16),
+                           rate: float = float("inf"),
+                           sampling: Optional[SamplingParams] = None,
+                           seed: int = 0) -> List[Request]:
+    """Long-document workload: few requests, each carrying a prompt far
+    longer than any prefill bucket — summarization / document-QA style
+    traffic. This is the workload chunked admission exists for: each
+    prompt is split into fixed-budget chunks across successive engine
+    steps (peak score materialization stays bounded by the chunk
+    budget) while any already-running lanes keep decoding between
+    chunks. Prompts are random tokens (content-free, like the other
+    synthetic workloads); `prompt_len` may be an int or (lo, hi)."""
+    rng = np.random.default_rng(seed)
+    arrivals = _arrivals(rng, n, rate)
+    plens = _sample_lengths(rng, prompt_len, n)
+    lo, hi = max_new
+    return [Request(
+        rid=i,
+        prompt=rng.integers(0, vocab_size, int(plens[i])).astype(np.int32),
+        max_new_tokens=int(rng.integers(lo, hi + 1)),
+        arrival=float(arrivals[i]),
+        sampling=_per_request(sampling, i)) for i in range(n)]
+
+
 def repetitive_requests(n: int, *, vocab_size: int, period: int = 6,
                         prompt_len: Union[int, Tuple[int, int]] = 48,
                         max_new: tuple = (16, 32),
@@ -491,6 +530,12 @@ def summarize(completions: Sequence[Completion], wall: float,
             "computed_tokens": runner.prefill_computed_tokens,
             "cached_tokens": sched.cached_prompt_tokens,
             "padded_tokens": runner.prefill_padded_tokens,
+            # analytic peak score-tile bytes of the largest prefill
+            # dispatch (the memory chunked admission bounds): with the
+            # streamed attention path this stays flat past attn_chunk
+            # no matter how long the prompt is
+            "chunk_budget": runner.prefill_chunk,
+            "peak_score_bytes": runner.prefill_peak_score_bytes,
         }
         snap = engine.stats()             # structured occupancy accessor
         stats["prefix_cache"] = {

@@ -67,6 +67,11 @@ from repro.serving.sampling import GREEDY, SamplingParams
 
 RECURRENT_KINDS = ("rwkv", "rec")
 
+# default chunked-prefill budget (tokens per prefill dispatch); prompts
+# whose suffix exceeds the largest prefill bucket are split into chunks
+# of at most this size — see ModelRunner(prefill_chunk=...)
+DEFAULT_PREFILL_CHUNK = 2048
+
 
 @dataclasses.dataclass
 class PrefillRow:
@@ -94,7 +99,8 @@ class ModelRunner:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  block_size: int, num_blocks: int, max_blocks_per_seq: int,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 prefill_max_batch: int = 4, speculate: int = 0,
+                 prefill_max_batch: int = 4,
+                 prefill_chunk: Optional[int] = None, speculate: int = 0,
                  max_logprobs: int = 8, obs: Observability = NULL_OBS,
                  now_fn: Optional[Callable[[], float]] = None):
         self.cfg = cfg
@@ -124,6 +130,32 @@ class ModelRunner:
         max_len = max_blocks_per_seq * block_size
         self.prefill_buckets = normalize_buckets(
             prefill_buckets, max_len, start=min(16, next_pow2(max_len)))
+        # chunked prefill budget: suffixes longer than the largest
+        # prefill bucket are split by the scheduler into chunks of at
+        # most this many tokens, dispatched across successive steps.
+        # None = auto (DEFAULT_PREFILL_CHUNK, capped to the grid — a
+        # no-op for short-context configs whose grid already covers
+        # max_len); 0 = disabled (oversized suffixes are rejected with
+        # an actionable error instead of compiling an oversized
+        # variant). The budget is bucket-aligned, and the bucket grid
+        # is capped at it so no dispatch ever exceeds the budget.
+        if prefill_chunk is None:
+            prefill_chunk = DEFAULT_PREFILL_CHUNK
+        if prefill_chunk:
+            budget = pick_bucket(min(prefill_chunk, max_len),
+                                 self.prefill_buckets)
+            self.prefill_buckets = [b for b in self.prefill_buckets
+                                    if b <= budget]
+            self.prefill_chunk = budget
+        else:
+            self.prefill_chunk = 0
+            if prefill_buckets:
+                # chunking explicitly off + an explicit grid: the grid
+                # is a hard cap (no silent extension to max_len), so an
+                # oversized suffix raises the actionable suffix_bucket
+                # error instead of compiling an unbounded variant
+                self.prefill_buckets = sorted(
+                    set(int(b) for b in prefill_buckets))
         self.prefill_max_batch = max(1, prefill_max_batch)
         self.width_buckets = width_buckets(self.prefill_max_batch)
         self.speculate = max(0, speculate)
@@ -193,11 +225,12 @@ class ModelRunner:
 
         self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
 
-        def _prefill(state, toks, lengths, cached, rows, slots):
+        def _prefill(state, toks, lengths, cached, rows, slots, resume):
             return lm.prefill_paged(params, cfg, state, toks, lengths,
-                                    cached, rows, slots)
+                                    cached, rows, slots, resume=resume)
 
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(0,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(0,),
+                                   static_argnums=(6,))
 
         def _first(last, positions, temps, topks, topps, seeds, do_sample,
                    want_alt):
@@ -220,6 +253,7 @@ class ModelRunner:
         self.prefill_dispatches = 0
         self.prefill_padded_tokens = 0       # token slots incl. padding
         self.prefill_computed_tokens = 0     # true suffix tokens computed
+        self.prefill_peak_score_bytes = 0    # analytic peak f32 score tile
         self.block_copies = 0
         self.verify_dispatches = 0
         self.verify_padded_tokens = 0        # chain slots incl. padding
@@ -290,14 +324,27 @@ class ModelRunner:
     # ------------------------------------------------------------------
 
     def suffix_bucket(self, n: int) -> int:
-        """Smallest configured length bucket covering n suffix tokens."""
+        """Smallest configured length bucket covering n suffix tokens.
+
+        A suffix that no bucket covers would otherwise fall through to
+        an oversized jit variant (the full dense score tensor) — the
+        scheduler must route it to chunked admission first, so reaching
+        here oversized is an error, with the fix spelled out."""
+        if n > self.prefill_buckets[-1]:
+            raise ValueError(
+                f"prompt suffix of {n} tokens exceeds the largest "
+                f"prefill bucket ({self.prefill_buckets[-1]}) and "
+                f"chunked prefill is disabled (prefill_chunk=0); enable "
+                f"chunked admission (prefill_chunk > 0, serve.py "
+                f"--prefill-chunk) or widen --prefill-buckets")
         return pick_bucket(n, self.prefill_buckets)
 
     def chain_bucket(self, n: int) -> int:
         """Smallest verify bucket covering an n-token draft chain."""
         return pick_bucket(n, self.verify_buckets)
 
-    def prefill(self, rows: List[PrefillRow]):
+    def prefill(self, rows: List[PrefillRow], *, resume: bool = False,
+                chunk: Optional[Tuple[int, int]] = None):
         """Run one bucketed batched prefill and sample each row's first
         token from its true-last-position logits with the row's own
         SamplingParams (position-keyed on the last prompt position).
@@ -306,7 +353,16 @@ class ModelRunner:
         alt) where alt is None unless a row asked for logprobs — then
         ((len(rows), max_logprobs) int32 ids, (..., max_logprobs)
         float32 logprobs) of the top alternatives at each row's last
-        prompt position."""
+        prompt position.
+
+        resume=True marks a chunked-prefill continuation (chunk >= 1 of
+        a split admission): recurrent layers pick their scanned state up
+        from the slot where the previous chunk left it — a separate jit
+        trace, so it rides in the dispatch-variant key. `chunk` is
+        (index, total) of the admission's chunk sequence, recorded on
+        the prefill step trace so Perfetto can attribute TTFT across a
+        multi-chunk admission; for non-final chunks the sampled "first
+        token" is a mid-prompt artifact the scheduler discards."""
         n = len(rows)
         obs = self._obs
         t0 = self._now() if obs.enabled else 0.0
@@ -337,10 +393,21 @@ class ModelRunner:
         self.prefill_dispatches += 1
         self.prefill_padded_tokens += width * ls
         self.prefill_computed_tokens += sum(r.suffix_len for r in rows)
+        # analytic peak attention-score bytes for this dispatch: the
+        # streamed path (attention.streamed_paged_attention) bounds the
+        # pool band at attn_chunk keys, plus the (ls, ls) suffix tile —
+        # f32 scores per head. Benchmarks assert this stays flat as the
+        # prompt grows past the chunk budget.
+        kv_band = min(self.max_blocks_per_seq * self.block_size,
+                      self.cfg.attn_chunk)
+        score_bytes = 4 * width * self.cfg.n_heads * ls * (kv_band + ls)
+        self.prefill_peak_score_bytes = max(self.prefill_peak_score_bytes,
+                                            score_bytes)
 
         last, self.state = self._prefill_fn(
             self.state, jnp.asarray(toks), jnp.asarray(lengths),
-            jnp.asarray(cached), jnp.asarray(tables), jnp.asarray(slots))
+            jnp.asarray(cached), jnp.asarray(tables), jnp.asarray(slots),
+            resume)
         do_sample = bool(temps.max() > 0.0)
         want_alt = any(r.sampling.logprobs for r in rows)
         first, lp, alt = self._first_fn(
@@ -350,15 +417,18 @@ class ModelRunner:
         out = (np.asarray(first, np.int32)[:n],
                np.asarray(lp, np.float32)[:n], self._host_alt(alt, n))
         if obs.enabled:
-            variant = (width, ls, do_sample, want_alt)
+            variant = (width, ls, do_sample, want_alt, resume)
             self._c_prefill.inc()
+            extra = {}
+            if chunk is not None:
+                extra = {"chunk": chunk[0], "chunks_total": chunk[1]}
             obs.step("prefill", t0, self._now(), batch=n,
                      bucket=[width, ls],
                      first_dispatch=variant not in self._prefill_variants,
                      emitted=n,
                      computed_tokens=sum(r.suffix_len for r in rows),
                      padded_tokens=width * ls,
-                     cached_tokens=sum(r.start for r in rows))
+                     cached_tokens=sum(r.start for r in rows), **extra)
             self._prefill_variants.add(variant)
         return out
 

@@ -165,6 +165,14 @@ class _Slot:
     alts: Optional[List[Tuple[List[int], List[float]]]] = None
     #                             # per-position top-k (ids, logprobs)
     stopped: bool = False         # a stop sequence completed
+    # chunked prefill (prompts longer than the largest prefill bucket):
+    # next uncomputed prompt position while the admission is still being
+    # prefilled chunk-by-chunk, -1 once prefill is complete. A slot with
+    # prefill_pos >= 0 holds its blocks/budget but sits out decode and
+    # verify dispatches until its final chunk lands the first token.
+    prefill_pos: int = -1
+    prefill_chunks: int = 0       # chunks dispatched so far
+    prefill_chunks_total: int = 0
 
 
 @dataclasses.dataclass
@@ -246,6 +254,7 @@ class Scheduler:
         self._queue: Deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._reserved_budget = 0     # sum of live slots' budgets
+        self._chunk_rr = 0            # round-robin over chunked prefills
         self.completions: List[Completion] = []
         self.on_event: Optional[Callable[[StreamEvent], None]] = None
         self.reset_stats()
@@ -278,6 +287,13 @@ class Scheduler:
                 f"request {req.rid}: prompt+max_new "
                 f"{len(req.prompt) + sp.max_new_tokens} exceeds "
                 f"max_seq_len {self.max_seq_len}")
+        top = self.runner.prefill_buckets[-1]
+        if not self.runner.prefill_chunk and len(req.prompt) > top:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"exceeds the largest prefill bucket {top} and chunked "
+                f"admission is disabled — enable it (prefill_chunk > 0, "
+                f"serve.py --prefill-chunk) or widen --prefill-buckets")
         cap = getattr(self.runner, "max_logprobs", None)
         if cap is not None and sp.logprobs > cap:
             raise ValueError(
@@ -441,7 +457,16 @@ class Scheduler:
         A request whose prefix overlaps a groupmate's beyond what the
         cache already holds is deferred one group (see
         `_defer_for_group_prefix`) so it shares blocks instead of
-        recomputing them."""
+        recomputing them.
+
+        A prompt whose suffix exceeds the largest prefill bucket is
+        routed to chunked admission instead: its blocks and budget are
+        reserved now, but the prefill itself runs one fixed-budget
+        chunk per engine step (`prefill_step`), interleaved with decode
+        dispatches so running lanes aren't starved during a long
+        admission. With chunking disabled (prefill_chunk=0) the same
+        suffix is rejected with an actionable error (suffix_bucket)
+        rather than falling through to an oversized jit variant."""
         while True:
             free = self._free_slots()
             if not free or not self._queue:
@@ -450,6 +475,7 @@ class Scheduler:
             plans: List[_Plan] = []
             bucket = None
             skipped: List[Request] = []
+            chunked = False
             while self._queue and len(plans) < cap:
                 req = self._queue[0]
                 match = self._match(req)  # peek: takes no references
@@ -458,6 +484,18 @@ class Scheduler:
                     continue
                 suf = len(req.prompt) - min(
                     match.tokens(self.block_size), len(req.prompt) - 1)
+                if (self.runner.prefill_chunk
+                        and suf > self.runner.prefill_buckets[-1]):
+                    if plans:             # needs its own admission
+                        skipped.append(self._queue.popleft())
+                        continue
+                    plan = self._reserve(req, free[0], match)
+                    if plan is None:
+                        break             # pool exhausted; retry later
+                    self._queue.popleft()
+                    self._begin_chunked(plan)
+                    chunked = True
+                    break                 # slot map changed; reform
                 b = self.runner.suffix_bucket(suf)
                 if bucket is not None and b != bucket:
                     skipped.append(self._queue.popleft())
@@ -470,9 +508,10 @@ class Scheduler:
                 bucket = b
             for req in reversed(skipped):
                 self._queue.appendleft(req)
-            if not plans:
+            if plans:
+                self._dispatch(plans)
+            elif not chunked:
                 return
-            self._dispatch(plans)
 
     def _dispatch(self, plans: List[_Plan]) -> None:
         rows = [PrefillRow(tokens=np.asarray(p.req.prompt, np.int32),
@@ -507,6 +546,88 @@ class Scheduler:
             self._emit(s, [int(tok)], [float(tok_lp)],
                        self._slice_alt(s, alt, i))
             self._maybe_finish(p.slot)
+
+    # ------------------------------------------------------------------
+    # chunked prefill (long-context admission)
+    # ------------------------------------------------------------------
+
+    def _begin_chunked(self, plan: _Plan) -> None:
+        """Claim a lane for a long prompt WITHOUT prefilling it: blocks
+        and budget are already reserved by `_reserve`; the prefill runs
+        one `runner.prefill_chunk`-token chunk per `prefill_step` call.
+        The slot sits out decode/verify (prefill_pos >= 0) until the
+        final chunk lands its first token."""
+        p = plan
+        P = len(p.req.prompt)
+        sp = p.req.sampling
+        # NOTE: the runner's persistent table row stays NULL until the
+        # final chunk lands (prefill dispatches carry their table row
+        # per-row): decode/verify steps running between chunks write
+        # their inactive-lane junk to the null sink, exactly like an
+        # evicted slot — writing the real row now would let them
+        # corrupt this prompt's block 0.
+        self.runner.set_sampling(p.slot, sp)
+        self._c_admitted.inc()
+        start = min(p.cached, P - 1)
+        chunk = self.runner.prefill_chunk
+        s = _Slot(
+            req=p.req, sp=sp, stops=[list(ss) for ss in sp.stop],
+            table_row=p.table_row, pos=P, pending=-1, out=[],
+            hist=[int(t) for t in p.req.prompt],
+            t_admit=p.t_admit, t_first=0.0, cached=p.cached,
+            n_blocks=p.n_blocks, prompt_blocks=p.n_blocks,
+            budget=p.budget, cow_block=p.cow_block,
+            cow_index=p.cow_index,
+            lps=[] if sp.logprobs else None,
+            alts=[] if sp.logprobs else None,
+            prefill_pos=start,
+            prefill_chunks_total=-(-(P - start) // chunk))
+        self._slots[p.slot] = s
+
+    def prefill_step(self) -> bool:
+        """Advance ONE in-flight chunked prefill by one chunk (round-
+        robin across slots so concurrent long admissions share the
+        step budget fairly). Each chunk is a resumed suffix prefill:
+        the previous chunks' KV already sit in this slot's pool blocks,
+        so cached_len picks up exactly where they stopped. The sampled
+        token of a non-final chunk is discarded (its logits sit mid-
+        prompt); the final chunk emits the real first token. Returns
+        True when a chunk was dispatched."""
+        pending = [i for i, s in enumerate(self._slots)
+                   if s is not None and s.prefill_pos >= 0]
+        if not pending:
+            return False
+        i = pending[self._chunk_rr % len(pending)]
+        self._chunk_rr += 1
+        s = self._slots[i]
+        P = len(s.req.prompt)
+        c = s.prefill_pos
+        clen = min(self.runner.prefill_chunk, P - c)
+        final = c + clen == P
+        row = PrefillRow(tokens=np.asarray(s.req.prompt[:c + clen],
+                                           np.int32),
+                         cached_len=c, slot=i, table_row=s.table_row,
+                         sampling=s.sp)
+        first, lp, alt = self.runner.prefill(
+            [row], resume=s.prefill_chunks > 0,
+            chunk=(s.prefill_chunks, s.prefill_chunks_total))
+        s.prefill_chunks += 1
+        if not final:
+            s.prefill_pos = c + clen
+            return True
+        if self.prefix_cache:
+            self.allocator.register_prefix(
+                s.req.prompt, [int(b) for b in s.table_row])
+        self.runner.write_table(i, s.table_row)
+        s.prefill_pos = -1
+        s.pending = int(first[0])
+        s.t_first = self._now()
+        if self._stop_cut(s, [s.pending]) is not None:
+            s.stopped = True
+        self._emit(s, [s.pending], [float(lp[0])],
+                   self._slice_alt(s, alt, 0))
+        self._maybe_finish(i)
+        return True
 
     # ------------------------------------------------------------------
     # emission + unified stop handling (eos == a one-token stop seq)
@@ -638,8 +759,10 @@ class Scheduler:
         """Assemble the plain one-token decode batch; fire pending lazy
         copy-on-writes and claim the block each lane's write needs.
         Returns (tokens, positions, active slot ids) or None when no
-        lane is active."""
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        lane is active. Lanes mid-way through a chunked prefill
+        (prefill_pos >= 0) have no first token yet and sit out."""
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and s.prefill_pos < 0]
         if not active:
             return None
         tokens = np.zeros(self.num_slots, np.int32)
@@ -682,8 +805,10 @@ class Scheduler:
         each chain would write, and pad to the runner's chain bucket.
         Returns (tokens (num_slots, T), positions, counts, active) — or
         None when no lane proposed anything, so the engine falls back
-        to the plain decode dispatch at zero overhead."""
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        to the plain decode dispatch at zero overhead. Lanes mid-way
+        through a chunked prefill sit out (see prepare_decode)."""
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and s.prefill_pos < 0]
         if not active:
             return None
         drafts: Dict[int, List[int]] = {}

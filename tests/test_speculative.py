@@ -352,6 +352,7 @@ class _FakeRunner:
 
     prefill_max_batch = 4
     max_logprobs = 8
+    prefill_chunk = 0         # chunked admission off; prompts fit the grid
 
     def __init__(self, speculate=8):
         self.prefill_buckets = pow2_buckets(64, start=8)
