@@ -16,7 +16,12 @@ Workloads (--workload):
                  record includes prefill jit shapes vs distinct lengths
   shared-prefix  common system prompt + short per-request suffix — runs
                  the engine with the prefix cache ON and OFF and records
-                 computed vs cached prefill tokens for both
+                 computed vs cached prefill tokens for both, plus a
+                 TIERED arm: the same traffic with enough distinct
+                 prefixes to thrash the slots-only pool, device-only vs
+                 device + host-RAM spill tier (--host-cache-blocks),
+                 gated on bit-identity, >= 1 host revival, and a strict
+                 cached-prompt-token gain over device-only
   multi-tenant   --tenants distinct shared prefixes, interleaved
                  arrivals — the workload that separates prefix-affinity
                  routing from round-robin
@@ -201,14 +206,15 @@ def _pool_blocks(args, max_seq):
 
 
 def _measure_engine(params, cfg, args, reqs, max_seq, prefix_cache,
-                    speculate: int = 0):
+                    speculate: int = 0, host_cache_blocks: int = 0):
     engine = ServingEngine(params, cfg, num_slots=args.slots,
                            block_size=args.block_size, max_seq_len=max_seq,
                            num_blocks=_pool_blocks(args, max_seq),
                            prefix_cache=prefix_cache,
                            prefill_max_batch=args.prefill_batch,
                            speculate=speculate, draft=args.draft,
-                           ngram=args.ngram)
+                           ngram=args.ngram, kv_dtype=args.kv_dtype,
+                           host_cache_blocks=host_cache_blocks)
     engine.run(reqs)                  # warm up jit on the workload shapes
     engine.reset_prefix_cache()       # measured pass starts cache-cold
     return run_engine(engine, reqs), engine
@@ -405,6 +411,16 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
                          "gets its own seed) with invariance gates")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--kv-dtype", default="fp16",
+                    choices=["fp16", "int8", "fp8"],
+                    help="paged KV pool storage dtype for every engine "
+                         "arm (fp16 = the bit-identical default; the "
+                         "identity gates vs generate() are only defined "
+                         "at fp16)")
+    ap.add_argument("--host-cache-blocks", type=int, default=None,
+                    help="host-RAM spill-tier capacity for the tiered "
+                         "shared-prefix arm (default: sized to hold "
+                         "every tiered-arm prefix chain twice over)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed CI gate: shrink the workload "
@@ -482,6 +498,9 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         "max_new": list(args.max_new),
         "slots": args.slots,
         "block_size": args.block_size,
+        # pool provenance: per-arm byte/occupancy detail lives in each
+        # arm's own stats["kv"] block (summarize() emits it)
+        "kv_dtype": args.kv_dtype,
         "baseline": {"useful_tokens": base_tok, "wall_s": round(base_s, 3),
                      "tokens_per_s": round(base_tps, 2)},
         "engine": eng_stats,
@@ -531,6 +550,63 @@ def run_bench(argv: Optional[List[str]] = None) -> dict:
         record["prefill_tokens_saved"] = (
             nocache["prefill"]["computed_tokens"]
             - eng_stats["prefill"]["computed_tokens"])
+        # ---- tiered-KV arm: the same traffic shape but with enough
+        # distinct system prompts that the device pool cannot keep
+        # every prefix chain resident between reuses — both arms run
+        # TWO slots so the slots-only pool is genuinely tight (at the
+        # full slot count the default pool has enough slack to keep
+        # all chains resident and the tier never engages).
+        # Device-only loses an evicted chain for good and re-prefills
+        # it; the host tier demotes evicted chains to RAM and revives
+        # them on the next prefix hit. Gated on bit-identity (the
+        # spill tier moves bytes, never changes them), at least one
+        # actual revival, and a strict cached-token gain. ----------
+        n_tiered = max(args.n_prefixes, 4)
+        targs = argparse.Namespace(**vars(args))
+        targs.slots = min(args.slots, 2)
+        treqs = shared_prefix_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            prefix_len=args.prefix_len,
+            suffix_len=tuple(args.suffix_len), max_new=tuple(args.max_new),
+            n_prefixes=n_tiered, seed=args.seed)
+        host_blocks = args.host_cache_blocks
+        if host_blocks is None:
+            per_prefix = -(-args.prefix_len // args.block_size)
+            host_blocks = 2 * n_tiered * per_prefix
+        (_, _, dev_stats, dev_done), _ = _measure_engine(
+            params, cfg, targs, treqs, max_seq, prefix_cache=True)
+        (_, _, tier_stats, tier_done), _ = _measure_engine(
+            params, cfg, targs, treqs, max_seq, prefix_cache=True,
+            host_cache_blocks=host_blocks)
+        tier_ref = {c.rid: c.tokens for c in dev_done}
+        tier_identical = ({c.rid for c in tier_done} == set(tier_ref)
+                          and all(np.array_equal(tier_ref[c.rid], c.tokens)
+                                  for c in tier_done))
+        gained = (tier_stats["prefill"]["cached_tokens"]
+                  - dev_stats["prefill"]["cached_tokens"])
+        record["engine_tiered_device_only"] = dev_stats
+        record["engine_tiered"] = tier_stats
+        record["tiered_gate"] = {
+            "n_prefixes": n_tiered,
+            "slots": targs.slots,
+            "host_cache_blocks": host_blocks,
+            "greedy_identical": tier_identical,
+            "host_revivals": tier_stats["kv"]["host_revivals"],
+            "host_demotions": tier_stats["kv"]["host_demotions"],
+            "cached_tokens_gained": gained,
+        }
+        record["tiered_cached_tokens_gained"] = gained
+        print(f"tiered_cached_tokens,{tier_stats['prefill']['cached_tokens']},"
+              f"vs {dev_stats['prefill']['cached_tokens']} device-only "
+              f"({tier_stats['kv']['host_revivals']} host revivals)")
+        print(f"tiered_identical,{tier_identical},host tier vs device-only")
+        # deterministic (fixed seed, arrivals at t=0) — gate every run,
+        # not only --smoke: a spill tier that changes tokens or never
+        # revives is broken regardless of run size
+        assert tier_identical, "host tier changed greedy output"
+        assert record["tiered_gate"]["host_revivals"] >= 1, \
+            "host tier never revived a block"
+        assert gained > 0, "host tier recovered no cached prompt tokens"
     if args.speculate > 0:
         (sp_tok, sp_s, sp_stats, sp_done), sp_engine = _measure_engine(
             params, cfg, args, reqs, max_seq, prefix_cache=None,

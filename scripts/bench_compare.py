@@ -41,6 +41,11 @@ METRICS: List[Tuple[str, bool]] = [
     ("engine_sampled.tokens_per_s", True),
     ("engine_no_prefix_cache.tokens_per_s", True),
     ("prefill_tokens_saved", True),
+    ("engine.prefill.cached_tokens", True),
+    ("engine_tiered.tokens_per_s", True),
+    ("engine_tiered.prefill.cached_tokens", True),
+    ("tiered_cached_tokens_gained", True),
+    ("tiered_gate.host_revivals", True),
 ]
 
 

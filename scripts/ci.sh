@@ -28,6 +28,17 @@
 #                              # regression gate: a fresh smoke-sized
 #                              # uniform bench diffed against the
 #                              # committed record via bench_compare
+#                              # + the quantized/tiered KV smoke:
+#                              # serve.py end-to-end on int8 pools with
+#                              # a host spill tier, then gates — fp16
+#                              # pools bit-identical, int8 greedy
+#                              # within the pinned per-token divergence
+#                              # budget (<= 10% on the fixed workload),
+#                              # >= 1 host-tier revival with output
+#                              # unchanged — and the shared-prefix
+#                              # regression gate: the committed record
+#                              # (incl. its tiered arm) re-run and
+#                              # diffed via bench_compare
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -78,6 +89,70 @@ PY
            python scripts/bench_compare.py \
                 experiments/serving/bench_smollm-135m_uniform.json \
                 "$cmp_dir/bench_smollm-135m_uniform.json" \
+                --threshold 0.5
+           # quantized + tiered KV smoke: serve.py runs int8 pools with
+           # a host spill tier end-to-end, then the correctness gates
+           python -m repro.launch.serve --requests 6 --slots 2 \
+                --prompt-len 12 24 --max-new 2 4 --seed 0 \
+                --kv-dtype int8 --host-cache-blocks 16
+           python - <<'PY'
+import jax
+import numpy as np
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import (ServingEngine, shared_prefix_requests,
+                                  synthetic_requests)
+
+cfg = get_config("smollm-135m").reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+def run(reqs, max_seq, slots=4, **kw):
+    eng = ServingEngine(params, cfg, num_slots=slots, block_size=16,
+                        max_seq_len=max_seq, **kw)
+    done = eng.run(list(reqs))
+    return {c.rid: list(map(int, c.tokens)) for c in done}, eng
+
+def mk():
+    return synthetic_requests(8, vocab_size=cfg.vocab_size,
+                              prompt_len=(16, 48), max_new=(8, 16), seed=0)
+
+base, _ = run(mk(), 80)
+fp16, _ = run(mk(), 80, kv_dtype="fp16")
+assert base == fp16, "fp16 pools changed greedy output"
+i8, _ = run(mk(), 80, kv_dtype="int8")
+tot = sum(len(v) for v in base.values())
+mism = sum(x != y for r in base for x, y in zip(base[r], i8[r]))
+# pinned per-token divergence budget for int8 pools on this exact
+# fixed-seed workload (measured 0 flips; 10% leaves margin for
+# numeric jitter while still catching a broken quantizer outright)
+assert mism / tot <= 0.10, f"int8 divergence {mism}/{tot} over budget"
+print(f"kv_int8_divergence,{mism}/{tot},<= 10% budget")
+
+def sp():
+    # 4 rotating system prompts against a slots-only pool: every
+    # admission evicts the other prefixes, so the host tier must
+    # demote and later revive chains to keep them cached
+    return shared_prefix_requests(16, vocab_size=cfg.vocab_size,
+                                  prefix_len=48, suffix_len=(8, 16),
+                                  max_new=(4, 8), n_prefixes=4, seed=0)
+
+dev, _ = run(sp(), 96, slots=2, prefix_cache=True, num_blocks=13)
+tier, eng = run(sp(), 96, slots=2, prefix_cache=True, num_blocks=13,
+                host_cache_blocks=32)
+assert dev == tier, "host spill tier changed greedy output"
+assert eng.allocator.host_revivals >= 1, "host tier never revived"
+print(f"kv_host_revivals,{eng.allocator.host_revivals},output unchanged")
+PY
+           # shared-prefix regression gate: rerun the committed
+           # record's workload (incl. the tiered host-RAM arm and its
+           # built-in identity/revival asserts) and diff cached-token
+           # + throughput metrics against the committed record
+           spx_dir="$(mktemp -d)"
+           python benchmarks/serving_bench.py --workload shared-prefix \
+                --seed 0 --out "$spx_dir"
+           python scripts/bench_compare.py \
+                experiments/serving/bench_smollm-135m_shared-prefix.json \
+                "$spx_dir/bench_smollm-135m_shared-prefix.json" \
                 --threshold 0.5
            exec python benchmarks/serving_bench.py \
                 --workload multi-tenant --smoke --replicas 2 --seed 0 \

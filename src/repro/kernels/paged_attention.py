@@ -16,6 +16,12 @@ allocation bound M.
 GQA: queries are laid out (B, KV, group, hd); each grid step contracts the
 whole query group against one (bs, hd) K/V block — kv_head indexing happens
 in the BlockSpec maps, mirroring flash_attention.py.
+
+Quantized pools (serving/kv_cache.py kv_dtype "int8"/"fp8") pass their
+per-(token slot, kv head) scale side-tables as extra operands; the kernel
+dequantizes each gathered block in-register against a (1, bs, 1) scale
+tile indexed by the same block-table map, so HBM still only ever moves the
+narrow pool elements.
 """
 from __future__ import annotations
 
@@ -31,8 +37,11 @@ from repro.compat import pallas_tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, scale, bs):
+def _kernel(bt_ref, cl_ref, q_ref, *refs, scale, bs, quant):
+    if quant:
+        k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -50,6 +59,9 @@ def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         q = q_ref[0, 0].astype(jnp.float32)              # (group, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, :, 0][:, None]             # (bs,) scales
+            v = v * vs_ref[0, :, 0][:, None]
         s = (q @ k.T) * scale                            # (group, bs)
         kpos = j * bs + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
@@ -70,15 +82,18 @@ def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
-                    interpret: bool = True):
+                    k_scale=None, v_scale=None, interpret: bool = True):
     """q: (B, H, hd); k_pool/v_pool: (N, bs, KV, hd);
     block_tables: (B, M) int32; ctx_lens: (B,) int32 valid-token counts
-    (rows with ctx_lens == 0 return zeros). Returns (B, H, hd)."""
+    (rows with ctx_lens == 0 return zeros); k_scale/v_scale (optional):
+    (N, bs, KV) float32 side-tables of a quantized pool — when given the
+    kernel dequantizes gathered blocks in-register. Returns (B, H, hd)."""
     B, H, hd = q.shape
     _, bs, KV, _ = k_pool.shape
     group = H // KV
     M = block_tables.shape[1]
     qg = q.reshape(B, KV, group, hd)
+    quant = k_scale is not None
 
     def q_map(b, kv, j, bt_ref, cl_ref):
         return (b, kv, 0, 0)
@@ -86,17 +101,27 @@ def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
     def kv_map(b, kv, j, bt_ref, cl_ref):
         return (bt_ref[b, j], 0, kv, 0)
 
-    kernel = functools.partial(_kernel, scale=hd**-0.5, bs=bs)
+    def sc_map(b, kv, j, bt_ref, cl_ref):
+        return (bt_ref[b, j], 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, group, hd), q_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    operands = [qg, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), sc_map),
+                     pl.BlockSpec((1, bs, 1), sc_map)]
+        operands += [k_scale, v_scale]
+
+    kernel = functools.partial(_kernel, scale=hd**-0.5, bs=bs, quant=quant)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(B, KV, M),
-            in_specs=[
-                pl.BlockSpec((1, 1, group, hd), q_map),
-                pl.BlockSpec((1, bs, 1, hd), kv_map),
-                pl.BlockSpec((1, bs, 1, hd), kv_map),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, group, hd), q_map),
             scratch_shapes=[
                 # m, l, acc live in VMEM across the logical-block sweep
@@ -109,5 +134,5 @@ def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
         interpret=interpret,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(block_tables, ctx_lens, qg, k_pool, v_pool)
+    )(block_tables, ctx_lens, *operands)
     return out.reshape(B, H, hd)

@@ -35,7 +35,11 @@ NEG_INF = -1e30
 
 
 def _kernel(bt_ref, st_ref, ln_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
-            o_ref, m_ref, l_ref, acc_ref, *, scale, bs, bq, M, window):
+            *refs, scale, bs, bq, M, window, quant):
+    if quant:
+        kps_ref, vps_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     n = pl.program_id(0)
     qi = pl.program_id(2)
     j = pl.program_id(3)
@@ -59,10 +63,13 @@ def _kernel(bt_ref, st_ref, ln_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
     def _compute():
         G = m_ref.shape[0]           # group * bq rows
         q = q_ref[0, 0].astype(jnp.float32).reshape(G, -1)   # (g*bq, hd)
-        k = jnp.where(is_pool, kp_ref[0, :, 0],
-                      ks_ref[0, :, 0]).astype(jnp.float32)   # (bs, hd)
-        v = jnp.where(is_pool, vp_ref[0, :, 0],
-                      vs_ref[0, :, 0]).astype(jnp.float32)
+        kp = kp_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+        vp = vp_ref[0, :, 0].astype(jnp.float32)
+        if quant:                    # dequantize the pool side in-register
+            kp = kp * kps_ref[0, :, 0][:, None]
+            vp = vp * vps_ref[0, :, 0][:, None]
+        k = jnp.where(is_pool, kp, ks_ref[0, :, 0].astype(jnp.float32))
+        v = jnp.where(is_pool, vp, vs_ref[0, :, 0].astype(jnp.float32))
         s = (q @ k.T) * scale                                # (g*bq, bs)
         qrow = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % bq
         qpos = st + qi * bq + qrow                           # absolute
@@ -90,13 +97,16 @@ def _kernel(bt_ref, st_ref, ln_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "bq", "interpret"))
 def paged_prefill_attention(q, k_suf, v_suf, k_pool, v_pool, block_tables,
-                            starts, lengths, *, window: int = 0,
-                            bq: int = 128, interpret: bool = True):
+                            starts, lengths, *, k_scale=None, v_scale=None,
+                            window: int = 0, bq: int = 128,
+                            interpret: bool = True):
     """q: (N, Ls, H, hd) rope'd suffix queries; k_suf/v_suf: (N, Ls, KV, hd)
     fresh suffix K/V (not yet scattered into the pools); k_pool/v_pool:
     (P, bs, KV, hd) physical block pools; block_tables: (N, M) int32;
     starts/lengths: (N,) int32 (rows with lengths == 0 return garbage —
-    mask downstream). Returns (N, Ls, H, hd) in q.dtype."""
+    mask downstream); k_scale/v_scale (optional): (P, bs, KV) float32
+    side-tables of a quantized pool, dequantized in-kernel (the fresh
+    suffix K/V stays full-precision). Returns (N, Ls, H, hd) in q.dtype."""
     N, Ls, H, hd = q.shape
     _, bs, KV, _ = k_pool.shape
     group = H // KV
@@ -105,6 +115,7 @@ def paged_prefill_attention(q, k_suf, v_suf, k_pool, v_pool, block_tables,
     nq = pl.cdiv(Ls, bq)
     ns = pl.cdiv(Ls, bs)
     qg = q.reshape(N, Ls, KV, group, hd).transpose(0, 2, 3, 1, 4)
+    quant = k_scale is not None
 
     def q_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
         return (n, kv, 0, qi, 0)
@@ -115,20 +126,30 @@ def paged_prefill_attention(q, k_suf, v_suf, k_pool, v_pool, block_tables,
     def suf_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
         return (n, jnp.clip(j - M, 0, ns - 1), kv, 0)
 
+    def sc_map(n, kv, qi, j, bt_ref, st_ref, ln_ref):
+        return (bt_ref[n, jnp.minimum(j, M - 1)], 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, group, bq, hd), q_map),
+        pl.BlockSpec((1, bs, 1, hd), pool_map),
+        pl.BlockSpec((1, bs, 1, hd), pool_map),
+        pl.BlockSpec((1, bs, 1, hd), suf_map),
+        pl.BlockSpec((1, bs, 1, hd), suf_map),
+    ]
+    operands = [qg, k_pool, v_pool, k_suf, v_suf]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), sc_map),
+                     pl.BlockSpec((1, bs, 1), sc_map)]
+        operands += [k_scale, v_scale]
+
     kernel = functools.partial(_kernel, scale=hd**-0.5, bs=bs, bq=bq,
-                               M=M, window=window)
+                               M=M, window=window, quant=quant)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(N, KV, nq, M + ns),
-            in_specs=[
-                pl.BlockSpec((1, 1, group, bq, hd), q_map),
-                pl.BlockSpec((1, bs, 1, hd), pool_map),
-                pl.BlockSpec((1, bs, 1, hd), pool_map),
-                pl.BlockSpec((1, bs, 1, hd), suf_map),
-                pl.BlockSpec((1, bs, 1, hd), suf_map),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, group, bq, hd), q_map),
             scratch_shapes=[
                 # m, l, acc live in VMEM across the key sweep
@@ -142,5 +163,5 @@ def paged_prefill_attention(q, k_suf, v_suf, k_pool, v_pool, block_tables,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-    )(block_tables, starts, lengths, qg, k_pool, v_pool, k_suf, v_suf)
+    )(block_tables, starts, lengths, *operands)
     return out.transpose(0, 3, 1, 2, 4).reshape(N, Ls, H, hd)

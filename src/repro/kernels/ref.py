@@ -34,12 +34,15 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return o.reshape(B, H, Sq, hd).astype(q.dtype)
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens):
+def paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens,
+                        k_scale=None, v_scale=None):
     """Single-token decode attention through a paged KV cache.
 
     q: (B, H, hd) current-token queries; k_pool/v_pool: (N, bs, KV, hd)
     physical blocks; block_tables: (B, M) int32 block ids per sequence;
-    ctx_lens: (B,) int32 number of valid tokens (0 => output row is zeros).
+    ctx_lens: (B,) int32 number of valid tokens (0 => output row is zeros);
+    k_scale/v_scale (optional): (N, bs, KV) float32 side-tables of a
+    quantized pool — pool values are dequantized after the dense gather.
     GQA via head grouping. Returns (B, H, hd).
     """
     B, H, hd = q.shape
@@ -47,6 +50,9 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens):
     group = H // KV
     k = k_pool[block_tables].reshape(B, -1, KV, hd).astype(jnp.float32)
     v = v_pool[block_tables].reshape(B, -1, KV, hd).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_tables].reshape(B, -1, KV)[..., None]
+        v = v * v_scale[block_tables].reshape(B, -1, KV)[..., None]
     qf = q.astype(jnp.float32).reshape(B, KV, group, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qf, k) * hd**-0.5
     valid = jnp.arange(k.shape[1])[None, :] < ctx_lens[:, None]

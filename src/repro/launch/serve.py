@@ -169,7 +169,8 @@ def _engine_kwargs(args, max_seq_len):
                 prefill_max_batch=args.prefill_batch,
                 prefill_chunk=args.prefill_chunk,
                 speculate=args.speculate, draft=args.draft,
-                ngram=args.ngram,
+                ngram=args.ngram, kv_dtype=args.kv_dtype,
+                host_cache_blocks=args.host_cache_blocks,
                 # widen the compiled top-k side output when the CLI asks
                 # for more alternatives than the engine default carries
                 max_logprobs=max(args.logprobs, 8))
@@ -277,6 +278,17 @@ def main():
                     help="draft proposer (ngram = prompt lookup)")
     ap.add_argument("--ngram", type=int, default=3,
                     help="longest n-gram the proposer matches")
+    ap.add_argument("--kv-dtype", default="fp16",
+                    choices=["fp16", "int8", "fp8"],
+                    help="paged KV pool storage dtype: fp16 keeps the "
+                         "model activation dtype (bit-identical), "
+                         "int8/fp8 quantize blocks on landing with "
+                         "per-slot-per-head scale tables")
+    ap.add_argument("--host-cache-blocks", type=int, default=0,
+                    help="host-RAM spill tier capacity in KV blocks: "
+                         "evicted cached prefix blocks demote to pinned "
+                         "host memory and revive on a later prefix hit "
+                         "(0 = off)")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="share cached prompt-prefix blocks (default: auto "

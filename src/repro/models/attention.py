@@ -16,6 +16,46 @@ from repro.models.layers import apply_rope, init_dense
 
 NEG_INF = -1e30
 
+# ----------------------------------------------------------------------------
+# Quantized paged KV pools. Scales are per-(token slot, kv head) max-abs
+# over head_dim — the optim/compression.py quantizer shape, localized per
+# pool slot so each write (prefill/decode/verify) quantizes independently
+# and copying a block's (q, scale) pair verbatim is an exact round-trip.
+# Pool layer dicts carry "k_scale"/"v_scale" side-tables when quantized;
+# consumers detect that by key presence, which is shape-static under jit.
+# ----------------------------------------------------------------------------
+
+_POOL_QMAX = {jnp.dtype(jnp.int8): 127.0}
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+if _FP8 is not None:
+    _POOL_QMAX[jnp.dtype(_FP8)] = 448.0
+
+
+def pool_qmax(dtype) -> float:
+    """Max representable magnitude targeted by quantize_kv for a pool."""
+    return _POOL_QMAX[jnp.dtype(dtype)]
+
+
+def quantize_kv(x, dtype):
+    """x: (..., KV, hd) -> (q: same shape in `dtype`, scale: (..., KV) f32).
+
+    scale = max|x| / qmax over head_dim; q = x / max(scale, eps), rounded
+    and clipped for integer pools (int8 uses the symmetric [-127, 127]
+    range). All-zero slots get scale 0, so dequantize returns exact zeros.
+    """
+    qmax = pool_qmax(dtype)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / qmax
+    q = xf / jnp.maximum(scale, 1e-12)[..., None]
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q.astype(dtype), scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of quantize_kv: (..., KV, hd) pool values -> float32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
 
 def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
     kq, kk, kv, ko = jax.random.split(key, 4)
@@ -283,10 +323,17 @@ def streamed_paged_attention(q, k, v, cache, block_tables, positions,
         bt = jnp.pad(bt, ((0, 0), (0, nb * cb - M)))
     bt = bt.reshape(N, nb, cb).transpose(1, 0, 2)            # (nb, N, cb)
 
+    quant = "k_scale" in cache
+
     def band(stats, inp):
         bi, btc = inp                                        # btc: (N, cb)
         gk = cache["k"][btc].reshape(N, cb * bs, *cache["k"].shape[2:])
         gv = cache["v"][btc].reshape(N, cb * bs, *cache["v"].shape[2:])
+        if quant:
+            gk = dequantize_kv(
+                gk, cache["k_scale"][btc].reshape(N, cb * bs, -1))
+            gv = dequantize_kv(
+                gv, cache["v_scale"][btc].reshape(N, cb * bs, -1))
         kpos = bi * cb * bs + jnp.arange(cb * bs)
         m = (kpos[None, None, :] < starts[:, None, None])    # (N, 1, cb*bs)
         if window > 0:
@@ -347,9 +394,15 @@ def paged_prefill_attention_block(params, x, cache, positions, block_tables,
                               jnp.clip(positions // bs, 0, M - 1), axis=1)
     blk = jnp.where(write, blk, 0)               # null-sink the rest
     off = positions % bs
-    ck = cache["k"].at[blk, off].set(k)
-    cv = cache["v"].at[blk, off].set(v)
-    return out, {"k": ck, "v": cv}
+    new_cache = dict(cache)
+    if "k_scale" in cache:                       # quantize on landing
+        k, sk = quantize_kv(k, cache["k"].dtype)
+        v, sv = quantize_kv(v, cache["v"].dtype)
+        new_cache["k_scale"] = cache["k_scale"].at[blk, off].set(sk)
+        new_cache["v_scale"] = cache["v_scale"].at[blk, off].set(sv)
+    new_cache["k"] = cache["k"].at[blk, off].set(k)
+    new_cache["v"] = cache["v"].at[blk, off].set(v)
+    return out, new_cache
 
 
 # ----------------------------------------------------------------------------
@@ -381,11 +434,23 @@ def paged_decode_attention_block(params, x, cache, positions, block_tables,
     bs = cache["k"].shape[1]
     blk = block_tables[jnp.arange(B), positions // bs]
     off = positions % bs
-    ck = cache["k"].at[blk, off].set(k[:, 0])
-    cv = cache["v"].at[blk, off].set(v[:, 0])
+    new_cache = dict(cache)
+    kw, vw = k[:, 0], v[:, 0]
+    if "k_scale" in cache:                       # quantize on landing
+        kw, sk = quantize_kv(kw, cache["k"].dtype)
+        vw, sv = quantize_kv(vw, cache["v"].dtype)
+        new_cache["k_scale"] = cache["k_scale"].at[blk, off].set(sk)
+        new_cache["v_scale"] = cache["v_scale"].at[blk, off].set(sv)
+    ck = cache["k"].at[blk, off].set(kw)
+    cv = cache["v"].at[blk, off].set(vw)
 
     gk = ck[block_tables].reshape(B, -1, *ck.shape[2:])  # (B, M*bs, KV, hd)
     gv = cv[block_tables].reshape(B, -1, *cv.shape[2:])
+    if "k_scale" in cache:                       # dequantize the gather
+        gk = dequantize_kv(gk, new_cache["k_scale"][block_tables]
+                           .reshape(B, -1, ck.shape[2]))
+        gv = dequantize_kv(gv, new_cache["v_scale"][block_tables]
+                           .reshape(B, -1, cv.shape[2]))
     s = _gqa_scores(q, gk) * (cfg.head_dim ** -0.5)      # (B, H, 1, M*bs)
     kpos = jnp.arange(gk.shape[1])
     valid = kpos[None, :] <= positions[:, None]
@@ -395,4 +460,5 @@ def paged_decode_attention_block(params, x, cache, positions, block_tables,
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = _gqa_out(p, gv).reshape(B, 1, -1)
-    return (o @ params["wo"]).astype(x.dtype), {"k": ck, "v": cv}
+    new_cache["k"], new_cache["v"] = ck, cv
+    return (o @ params["wo"]).astype(x.dtype), new_cache

@@ -22,6 +22,17 @@ serving-side analogue of the paper's hold-state-to-avoid-recomputation
 tradeoff. Allocation prefers truly-free blocks and evicts cached-free
 blocks LRU-first only under pressure, unregistering them.
 
+Host spill tier: with `host_cache_blocks > 0` and fetch/store callbacks
+(ModelRunner.fetch_block / upload_blocks), eviction does not discard a
+cached block's payload — it is DEMOTED to a capacity-bounded LRU of host
+(numpy) payloads keyed by the same content-hash chain keys. A later
+match_prefix that runs off the device chain walks the host continuation,
+re-allocates device blocks (only from the truly-free list, never by
+evicting — the current match may pin cached blocks), uploads the payloads
+batched, and re-registers them under their original keys as cached-free
+blocks — so the existing share/COW machinery sees an ordinary prefix hit.
+Quantized pools demote (q, scale) verbatim, so a round-trip is exact.
+
 Invariants (property-tested in tests/test_block_manager.py):
   * refcounts are never negative; decref of a dead block raises,
   * a block is never simultaneously free and referenced,
@@ -49,15 +60,22 @@ class PrefixMatch:
                     the prompt's remainder (the first divergent block —
                     shared copy-on-write), or None
     partial_len     matched tokens inside partial_block
+    spilled_tokens  tokens whose blocks sit in the HOST tier continuation
+                    past the device chain (only set by probe-mode
+                    match_prefix(promote=False); a promoting match revives
+                    them into full_blocks instead)
     """
 
-    __slots__ = ("full_blocks", "partial_block", "partial_len")
+    __slots__ = ("full_blocks", "partial_block", "partial_len",
+                 "spilled_tokens")
 
     def __init__(self, full_blocks: List[int],
-                 partial_block: Optional[int], partial_len: int):
+                 partial_block: Optional[int], partial_len: int,
+                 spilled_tokens: int = 0):
         self.full_blocks = full_blocks
         self.partial_block = partial_block
         self.partial_len = partial_len
+        self.spilled_tokens = spilled_tokens
 
     def tokens(self, block_size: int) -> int:
         return len(self.full_blocks) * block_size + self.partial_len
@@ -74,16 +92,24 @@ class BlockAllocator:
 
     `block_size` is only needed for the prefix-cache methods
     (match_prefix / register_prefix); a plain allocator can pass 0.
+
+    `host_cache_blocks` > 0 enables the host spill tier; `fetch_block`
+    (block id -> host payload) and `store_blocks` (ids, payloads -> None)
+    are the device<->host movement callbacks, normally
+    ModelRunner.fetch_block / ModelRunner.upload_blocks.
     """
 
     def __init__(self, num_blocks: int, block_size: int = 0,
-                 obs=None):
+                 obs=None, host_cache_blocks: int = 0,
+                 fetch_block=None, store_blocks=None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is reserved)")
         from repro.serving.observability import NULL_OBS
         self._obs = obs or NULL_OBS
         self._c_allocs = self._obs.counter("blocks_allocated_total")
         self._c_evictions = self._obs.counter("cache_evictions_total")
+        self._c_demotions = self._obs.counter("host_demotions_total")
+        self._c_revivals = self._obs.counter("host_revivals_total")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
@@ -95,8 +121,15 @@ class BlockAllocator:
         self._tokens: Dict[int, Tuple[int, ...]] = {}
         self._children: Dict[Tuple, set] = {}  # parent key -> {blocks}
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU ref==0
+        # host spill tier: chain key -> (parent key, chunk, payload), LRU
+        self.host_cache_blocks = int(host_cache_blocks)
+        self._fetch = fetch_block
+        self._store = store_blocks
+        self._host: "OrderedDict[int, Tuple]" = OrderedDict()
         # telemetry
         self.cache_evictions = 0
+        self.host_demotions = 0
+        self.host_revivals = 0
 
     # ------------------------------------------------------------------
     # refcounted alloc / free
@@ -110,6 +143,11 @@ class BlockAllocator:
     @property
     def num_cached(self) -> int:
         return len(self._cached)
+
+    @property
+    def num_spilled(self) -> int:
+        """Blocks currently held in the host spill tier."""
+        return len(self._host)
 
     @property
     def num_indexed(self) -> int:
@@ -133,7 +171,7 @@ class BlockAllocator:
         for _ in range(n):
             if not self._free:
                 victim, _ = self._cached.popitem(last=False)  # LRU
-                self._evict(victim)
+                self._evict(victim, demote=True)
                 self._free.append(victim)
                 self.cache_evictions += 1
                 self._c_evictions.inc()
@@ -143,21 +181,43 @@ class BlockAllocator:
         self._c_allocs.inc(n)
         return blocks
 
-    def _evict(self, block: int) -> None:
+    def _evict(self, block: int, demote: bool = False) -> None:
         """Unregister `block` and its whole indexed descendant subtree —
         once the chain breaks, descendants can never be matched again.
         Cached-free descendants return to the free list immediately;
-        live (still-referenced) ones just lose their registration."""
+        live (still-referenced) ones just lose their registration.
+        With `demote` (eviction under allocation pressure), the victim
+        and its cached-free descendants spill to the host tier first —
+        their chain keys stay intact there, so the subtree remains
+        revivable even though the device chain broke."""
         stack = [block]
         while stack:
             b = stack.pop()
             key = self._key.get(b)
             if key is not None:
                 stack.extend(self._children.get(key, ()))
+                if demote and (b == block or b in self._cached):
+                    self._demote(b)
             self._unregister(b)
             if b != block and b in self._cached:
                 del self._cached[b]
                 self._free.append(b)
+
+    def _demote(self, block: int) -> None:
+        """Snapshot a registered block's payload into the host LRU."""
+        if (not self.host_cache_blocks or self._fetch is None
+                or self._store is None):
+            return
+        key = self._key.get(block)
+        if key is None:
+            return
+        self._host[key] = (self._parent[block], self._tokens[block],
+                           self._fetch(block))
+        self._host.move_to_end(key)
+        while len(self._host) > self.host_cache_blocks:
+            self._host.popitem(last=False)
+        self.host_demotions += 1
+        self._c_demotions.inc()
 
     def incref(self, block: int) -> None:
         """Take a reference on a live or cached-free block (sharing)."""
@@ -218,21 +278,35 @@ class BlockAllocator:
             return None                   # hash collision -> miss
         return b
 
-    def match_prefix(self, tokens: np.ndarray) -> PrefixMatch:
-        """Longest cached prefix of `tokens` (read-only peek: takes no
-        references). Full chunks match exactly through the chain index;
-        the remainder may partially match the first tokens of one more
-        cached block — the first divergent block, shareable with COW."""
+    def match_prefix(self, tokens: np.ndarray,
+                     promote: bool = True) -> PrefixMatch:
+        """Longest cached prefix of `tokens`. Full chunks match exactly
+        through the chain index; the remainder may partially match the
+        first tokens of one more cached block — the first divergent
+        block, shareable with COW.
+
+        When the device chain runs out, the host tier is consulted:
+        with `promote` (the admission path), a host continuation is
+        revived into freshly-allocated device blocks (cached-free,
+        re-registered under their original keys) and keeps matching;
+        with promote=False (the router's affinity probe) the
+        continuation is only counted in `spilled_tokens` — the probe
+        takes no references and moves no payloads."""
         if not self.block_size:
             return PrefixMatch([], None, 0)
         toks = [int(t) for t in tokens]
         bs = self.block_size
         parent = _ROOT
         full: List[int] = []
+        spilled = 0
         for i in range(len(toks) // bs):
             chunk = tuple(toks[i * bs:(i + 1) * bs])
             b = self._lookup(parent, chunk)
+            if b is None and promote and self._revive(parent, toks, i):
+                b = self._lookup(parent, chunk)
             if b is None:
+                if not promote:
+                    spilled = self._host_chain_len(parent, toks, i) * bs
                 break
             full.append(b)
             parent = self._chunk_key(parent, chunk)
@@ -252,7 +326,63 @@ class BlockAllocator:
                 best, best_len = cand, d
         if best is not None and best in full:
             best, best_len = None, 0      # already counted as a full match
-        return PrefixMatch(full, best, best_len)
+        return PrefixMatch(full, best, best_len, spilled)
+
+    def _host_chain_len(self, parent, toks: List[int],
+                        start_chunk: int) -> int:
+        """Length (in blocks) of the host-tier chain continuing `parent`
+        along the prompt's chunks. Read-only (the affinity probe)."""
+        bs = self.block_size
+        n, p = 0, parent
+        for i in range(start_chunk, len(toks) // bs):
+            chunk = tuple(toks[i * bs:(i + 1) * bs])
+            key = self._chunk_key(p, chunk)
+            ent = self._host.get(key)
+            if ent is None or ent[0] != p or ent[1] != chunk:
+                break
+            n += 1
+            p = key
+        return n
+
+    def _revive(self, parent, toks: List[int], start_chunk: int) -> int:
+        """Promote the host-tier chain continuation back into device
+        blocks. Allocates only from the truly-free list (never evicts —
+        cached-free blocks may belong to the match in progress), uploads
+        the payloads in one batched store, and re-registers each block
+        under its original chain key as cached-free. Returns #revived."""
+        if not self._host or self._store is None:
+            return 0
+        bs = self.block_size
+        found = []                       # (key, parent, chunk, payload)
+        p = parent
+        for i in range(start_chunk, len(toks) // bs):
+            if len(found) >= len(self._free):
+                break
+            chunk = tuple(toks[i * bs:(i + 1) * bs])
+            key = self._chunk_key(p, chunk)
+            ent = self._host.get(key)
+            if (ent is None or ent[0] != p or ent[1] != chunk
+                    or key in self._index):
+                break
+            found.append((key, p, chunk, ent[2]))
+            p = key
+        if not found:
+            return 0
+        blocks = self.alloc(len(found))  # free-list only: n <= len(_free)
+        if blocks is None:
+            return 0
+        self._store(blocks, [f[3] for f in found])
+        for b, (key, par, chunk, _) in zip(blocks, found):
+            del self._host[key]
+            self._index[key] = b
+            self._key[b] = key
+            self._parent[b] = par
+            self._tokens[b] = chunk
+            self._children.setdefault(par, set()).add(b)
+            self.decref(b)               # indexed -> parks cached-free
+            self.host_revivals += 1
+            self._c_revivals.inc()
+        return len(blocks)
 
     def share(self, match: PrefixMatch) -> None:
         """Commit a match: take one reference on every matched block
@@ -315,11 +445,12 @@ class BlockAllocator:
                 del self._children[parent]
 
     def reset_prefix_cache(self) -> None:
-        """Drop the whole index; cached-free blocks return to the free
-        list. Live shared blocks stay shared (their refcounts are
-        untouched) but are no longer discoverable."""
+        """Drop the whole index (host tier included); cached-free blocks
+        return to the free list. Live shared blocks stay shared (their
+        refcounts are untouched) but are no longer discoverable."""
         for b in list(self._key):
             self._unregister(b)
         while self._cached:
             b, _ = self._cached.popitem(last=False)
             self._free.append(b)
+        self._host.clear()

@@ -100,6 +100,14 @@ class ServingEngine:
     max_logprobs       static top-k width compiled for the alternative-
                        logprob side output (SamplingParams.logprobs=k
                        must have k <= this)
+    kv_dtype           KV pool precision: "fp16" (the activation dtype —
+                       bit-identical default), "int8" or "fp8"
+                       (quantized pools with per-(token, head) scale
+                       side-tables — see serving/kv_cache.py)
+    host_cache_blocks  capacity of the host-RAM spill tier (0 = off):
+                       evicted cached blocks demote to a host LRU of
+                       that many block payloads and revive on prefix
+                       hit instead of being recomputed
 
     temperature / seed are DEPRECATED engine-wide knobs, kept as a
     back-compat shim: they map to a default SamplingParams (with a
@@ -117,7 +125,8 @@ class ServingEngine:
                  prefill_max_batch: int = 4,
                  prefill_chunk: Optional[int] = None, speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3,
-                 max_logprobs: int = 8,
+                 max_logprobs: int = 8, kv_dtype: str = "fp16",
+                 host_cache_blocks: int = 0,
                  obs: Observability = NULL_OBS):
         if cfg.frontend != "none":
             raise NotImplementedError(
@@ -150,10 +159,12 @@ class ServingEngine:
 
         self.speculate = max(0, speculate)
         self.draft = draft
+        self.kv_dtype = kv_dtype
+        self.host_cache_blocks = max(0, int(host_cache_blocks))
         self.obs = obs or NULL_OBS
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
-        self.allocator = BlockAllocator(num_blocks, block_size=block_size,
-                                        obs=self.obs)
+        # runner first: the allocator's host spill tier moves payloads
+        # through the runner's fetch/upload callbacks
         self.runner = ModelRunner(
             params, cfg, num_slots=num_slots, block_size=block_size,
             num_blocks=num_blocks,
@@ -161,7 +172,13 @@ class ServingEngine:
             prefill_buckets=prefill_buckets,
             prefill_max_batch=prefill_max_batch,
             prefill_chunk=prefill_chunk, speculate=self.speculate,
-            max_logprobs=max_logprobs, obs=self.obs, now_fn=self._now)
+            max_logprobs=max_logprobs, kv_dtype=kv_dtype, obs=self.obs,
+            now_fn=self._now)
+        self.allocator = BlockAllocator(
+            num_blocks, block_size=block_size, obs=self.obs,
+            host_cache_blocks=self.host_cache_blocks,
+            fetch_block=self.runner.fetch_block,
+            store_blocks=self.runner.upload_blocks)
         self.scheduler = Scheduler(
             self.allocator, self.runner, num_slots=num_slots,
             block_size=block_size,
@@ -207,7 +224,14 @@ class ServingEngine:
         self.scheduler.reset_stats()      # telemetry is per run
         self.runner.reset_stats()
         self.allocator.cache_evictions = 0
+        self.allocator.host_demotions = 0
+        self.allocator.host_revivals = 0
         self.obs.begin_run()
+        if self.obs.enabled:
+            # static pool-capacity gauges (instruments reset per run)
+            self.obs.gauge("kv_device_bytes_gauge").set(self.cache_bytes)
+            self.obs.gauge("kv_host_bytes_gauge").set(
+                self.host_cache_blocks * self.runner.block_bytes)
 
     def reset_prefix_cache(self) -> None:
         """Drop cached prompt blocks (e.g. between benchmark runs)."""
@@ -545,6 +569,16 @@ def summarize(completions: Sequence[Completion], wall: float,
             "evictions": engine.allocator.cache_evictions,
             # blocks still holding reusable prefix KV after the run
             "warm_blocks": snap.cached_blocks,
+        }
+        stats["kv"] = {
+            "dtype": engine.kv_dtype,
+            "device_pool_bytes": engine.cache_bytes,
+            "host_cache_blocks": engine.host_cache_blocks,
+            "host_pool_bytes": (engine.host_cache_blocks
+                                * engine.runner.block_bytes),
+            "spilled_blocks": snap.spilled_blocks,
+            "host_demotions": engine.allocator.host_demotions,
+            "host_revivals": engine.allocator.host_revivals,
         }
         if engine.speculate:
             dispatches = engine.steps      # decode + verify iterations

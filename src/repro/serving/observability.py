@@ -334,6 +334,8 @@ class Observability:
         self.gauge("blocks_free_gauge").set(stats.free_blocks)
         self.gauge("blocks_cached_gauge").set(stats.cached_blocks)
         self.gauge("blocks_reserved_gauge").set(stats.reserved_blocks)
+        spilled = getattr(stats, "spilled_blocks", 0)
+        self.gauge("blocks_spilled_gauge").set(spilled)
         last = self._last_sample[0]
         if last is not None and t - last < self.sample_interval:
             return
@@ -346,6 +348,7 @@ class Observability:
             "free_blocks": stats.free_blocks,
             "cached_blocks": stats.cached_blocks,
             "reserved_blocks": stats.reserved_blocks,
+            "spilled_blocks": spilled,
         })
 
     # -- lifecycle -------------------------------------------------------

@@ -77,6 +77,10 @@ class ReplicaSnapshot:
         return self.stats.indexed_blocks
 
     @property
+    def spilled_blocks(self) -> int:  # blocks demoted to the host tier
+        return getattr(self.stats, "spilled_blocks", 0)
+
+    @property
     def load(self) -> int:
         """Slot + queue occupancy — the least-loaded placement signal."""
         return self.stats.load
@@ -142,13 +146,17 @@ class Replica:
     def probe_prefix(self, prompt) -> int:
         """Affinity signal: leading tokens of `prompt` this replica's
         allocator already holds (read-only content-hash probe — takes
-        no references, capped at len(prompt) - 1 like admission's own
-        accounting). 0 when the replica has prefix caching off."""
+        no references, revives nothing, capped at len(prompt) - 1 like
+        admission's own accounting). Tokens whose blocks were demoted
+        to the host tier count too — the replica can revive them on
+        admission, so they are real affinity the router should see.
+        0 when the replica has prefix caching off."""
         if not self.engine.prefix_cache:
             return 0
         prompt = np.asarray(prompt)
-        match = self.engine.allocator.match_prefix(prompt)
-        return min(match.tokens(self.engine.block_size), len(prompt) - 1)
+        match = self.engine.allocator.match_prefix(prompt, promote=False)
+        cached = match.tokens(self.engine.block_size) + match.spilled_tokens
+        return min(cached, len(prompt) - 1)
 
     # ------------------------------------------------------------------
     # drain / completion collection

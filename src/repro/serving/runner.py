@@ -61,7 +61,7 @@ from repro.serving import kv_cache, sampling
 from repro.serving.block_manager import NULL_BLOCK
 from repro.serving.bucketing import (chain_buckets, next_pow2,  # noqa: F401
                                      normalize_buckets, pick_bucket,
-                                     width_buckets)
+                                     pow2_buckets, width_buckets)
 from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.sampling import GREEDY, SamplingParams
 
@@ -101,8 +101,12 @@ class ModelRunner:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_batch: int = 4,
                  prefill_chunk: Optional[int] = None, speculate: int = 0,
-                 max_logprobs: int = 8, obs: Observability = NULL_OBS,
+                 max_logprobs: int = 8, kv_dtype: str = "fp16",
+                 obs: Observability = NULL_OBS,
                  now_fn: Optional[Callable[[], float]] = None):
+        if kv_dtype not in kv_cache.KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; expected "
+                             f"{kv_cache.KV_DTYPES}")
         self.cfg = cfg
         self._obs = obs or NULL_OBS
         self._now = now_fn or (lambda: 0.0)
@@ -120,9 +124,12 @@ class ModelRunner:
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
+        self.kv_dtype = kv_dtype
         self.state = kv_cache.init_paged_state(cfg, num_slots, num_blocks,
-                                               block_size)
-        self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size)
+                                               block_size, kv_dtype)
+        self.cache_bytes = kv_cache.paged_bytes(cfg, num_blocks, block_size,
+                                                kv_dtype)
+        self.block_bytes = kv_cache.block_bytes(cfg, block_size, kv_dtype)
         self._has_recurrent = any(
             k in RECURRENT_KINDS
             for k in cfg.block_pattern + cfg.prefix_pattern)
@@ -248,6 +255,25 @@ class ModelRunner:
             return kv_cache.copy_block(cfg, state, src, dst)
 
         self._copy_fn = jax.jit(_copy, donate_argnums=(0,))
+
+        # host-tier payload movement: a single-block jitted gather
+        # (demotion) and a width-bucketed jitted scatter (revival).
+        # Promotion batches pad to `promote_buckets` via pick_bucket, so
+        # revivals never compile outside the bucket grid
+        # (`promote_shapes` records dispatched widths for the bound
+        # assertion, like prefill_shapes).
+        self.promote_buckets = pow2_buckets(max_blocks_per_seq)
+        self.promote_shapes: set = set()
+
+        def _gather(state, ids):
+            return kv_cache.gather_blocks(cfg, state, ids)
+
+        self._gather_fn = jax.jit(_gather)
+
+        def _upload(state, ids, payload):
+            return kv_cache.scatter_blocks(cfg, state, ids, payload)
+
+        self._upload_fn = jax.jit(_upload, donate_argnums=(0,))
 
     def reset_stats(self) -> None:
         self.prefill_dispatches = 0
@@ -529,3 +555,39 @@ class ModelRunner:
                                    jnp.int32(dst))
         self.block_copies += 1
         self._c_copies.inc()
+
+    # ------------------------------------------------------------------
+    # host-tier payload movement (BlockAllocator demotion / revival)
+    # ------------------------------------------------------------------
+
+    def fetch_block(self, block: int):
+        """Device -> host: one block's payload from every attention pool
+        (a kv_cache.gather_blocks tree of (1, ...) numpy leaves;
+        quantized pools include the scale tables verbatim) — the
+        allocator's host-tier demotion callback."""
+        payload = self._gather_fn(self.state,
+                                  jnp.asarray([block], jnp.int32))
+        return jax.device_get(payload)
+
+    def upload_blocks(self, ids: Sequence[int], payloads: Sequence) -> None:
+        """Host -> device: scatter demoted payloads back into the pools
+        at `ids` (the allocator's revival callback). The batch pads to a
+        promote_buckets width — pad lanes target the reserved null
+        block — so one jitted scatter per bucket width serves every
+        revival."""
+        n = len(ids)
+        w = pick_bucket(n, self.promote_buckets)
+        self.promote_shapes.add(w)
+        idarr = np.full(w, NULL_BLOCK, np.int32)
+        idarr[:n] = ids
+
+        def cat(*leaves):
+            out = np.concatenate(leaves, axis=0)
+            if w > n:
+                pad = np.zeros((w - n,) + out.shape[1:], out.dtype)
+                out = np.concatenate([out, pad], axis=0)
+            return out
+
+        payload = jax.tree.map(cat, payloads[0], *payloads[1:])
+        self.state = self._upload_fn(self.state, jnp.asarray(idarr),
+                                     payload)

@@ -136,6 +136,7 @@ class SchedulerStats:
     cached_blocks: int            # cached-free blocks holding warm prefixes
     indexed_blocks: int           # blocks published in the prefix index
     reserved_blocks: int          # reserved-but-unbound generation budget
+    spilled_blocks: int = 0       # host-tier block payloads (spill tier)
 
     @property
     def load(self) -> int:
@@ -325,7 +326,8 @@ class Scheduler:
             free_blocks=self.allocator.num_free,
             cached_blocks=self.allocator.num_cached,
             indexed_blocks=self.allocator.num_indexed,
-            reserved_blocks=self._reserved_budget)
+            reserved_blocks=self._reserved_budget,
+            spilled_blocks=getattr(self.allocator, "num_spilled", 0))
 
     def slot_acceptance_rates(self) -> List[Optional[float]]:
         """Rolling per-slot draft acceptance rate (accepted/proposed over
