@@ -30,10 +30,14 @@ METRICS: List[Tuple[str, bool]] = [
     ("baseline.tokens_per_s", True),
     ("engine.tokens_per_s", True),
     ("engine.ttft_p50_ms", False),
+    ("engine.ttft_p95_ms", False),
     ("engine.ttft_p99_ms", False),
     ("engine.latency_p50_ms", False),
+    ("engine.latency_p95_ms", False),
     ("engine.latency_p99_ms", False),
     ("engine.tpot_p50_ms", False),
+    ("engine.tpot_p95_ms", False),
+    ("engine.tpot_p99_ms", False),
     ("speedup", True),
     ("engine_speculative.tokens_per_s", True),
     ("engine_speculative.speculation.acceptance_rate", True),
@@ -46,6 +50,16 @@ METRICS: List[Tuple[str, bool]] = [
     ("engine_tiered.prefill.cached_tokens", True),
     ("tiered_cached_tokens_gained", True),
     ("tiered_gate.host_revivals", True),
+    # bursty / autoscaled arms: tail TTFT is the SLO a burst breaks and
+    # elasticity exists to protect — the p99 paths below are the gate
+    ("fixed.tokens_per_s", True),
+    ("fixed.ttft_p99_ms", False),
+    ("autoscaled.tokens_per_s", True),
+    ("autoscaled.ttft_p95_ms", False),
+    ("autoscaled.ttft_p99_ms", False),
+    ("autoscale_gate.ttft_p99_win", True),
+    ("autoscale_gate.scale_out_events", True),
+    ("autoscale_gate.scale_in_events", True),
 ]
 
 

@@ -39,6 +39,13 @@
 #                              # regression gate: the committed record
 #                              # (incl. its tiered arm) re-run and
 #                              # diffed via bench_compare
+#                              # + the autoscale smoke: serve.py on a
+#                              # bursty workload with elastic replicas
+#                              # (>= 1 scale-out and >= 1 scale-in in
+#                              # the metrics dump, autoscaled outputs
+#                              # bit-identical to a fixed-size run) and
+#                              # the bursty regression gate against the
+#                              # committed record
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -153,6 +160,72 @@ PY
            python scripts/bench_compare.py \
                 experiments/serving/bench_smollm-135m_shared-prefix.json \
                 "$spx_dir/bench_smollm-135m_shared-prefix.json" \
+                --threshold 0.5
+           # autoscale smoke: serve.py end-to-end on a bursty workload
+           # with elastic replicas — the metrics dump must record at
+           # least one scale-out AND one scale-in (cold standby stacks
+           # make the burst pressure sustain past the policy windows
+           # even at tiny decode lengths)
+           as_dir="$(mktemp -d)"
+           python -m repro.launch.serve --workload bursty --requests 20 \
+                --slots 2 --prompt-len 8 16 --max-new 2 4 \
+                --burst-rate 400 --base-rate 2 --burst-every 30 \
+                --burst-len 0.04 --autoscale --min-replicas 1 \
+                --max-replicas 3 --priorities 0 1 --seed 0 \
+                --metrics-out "$as_dir/metrics.json"
+           python - "$as_dir" <<'PY'
+import json, sys
+with open(f"{sys.argv[1]}/metrics.json") as f:
+    doc = json.load(f)
+vals = {c["name"]: c["value"] for c in doc["counters"]}
+out_n = vals.get("autoscaler_scale_out_total", 0)
+in_n = vals.get("autoscaler_scale_in_total", 0)
+assert out_n >= 1, f"no scale-out recorded ({vals})"
+assert in_n >= 1, f"no scale-in recorded ({vals})"
+print(f"autoscale_events,out={out_n},in={in_n}")
+PY
+           # ...and elasticity must be invisible in the tokens: the
+           # same bursty workload through an autoscaled cluster is
+           # bit-identical to a fixed single-replica engine
+           python - <<'PY'
+import jax
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy
+from repro.serving.engine import ServingEngine, bursty_requests
+from repro.serving.replica import Replica
+from repro.serving.router import Router
+
+cfg = get_config("smollm-135m").reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+def mk():
+    return bursty_requests(12, vocab_size=cfg.vocab_size, base_rate=2.0,
+                           burst_rate=400.0, burst_every=30.0,
+                           burst_len=0.03, prompt_len=(8, 16),
+                           max_new=(2, 4), priorities=(0, 1), seed=0)
+
+kw = dict(num_slots=2, block_size=4, max_seq_len=32, prefill_max_batch=2)
+eng = ServingEngine(params, cfg, **kw)
+fixed = {c.rid: list(map(int, c.tokens)) for c in eng.run(mk())}
+reps = [Replica(params, cfg, replica_id=i, **kw) for i in range(3)]
+router = Router(reps[:1], policy="least-loaded")
+Autoscaler(router, policy=AutoscalePolicy(min_replicas=1, max_replicas=3,
+                                          cooldown_s=0.1),
+           standby=reps[1:])
+auto = {c.rid: list(map(int, c.tokens)) for c in router.run(mk())}
+assert fixed == auto, "autoscaled cluster changed greedy output"
+print(f"autoscale_identity,{len(fixed)} requests,bit-identical")
+PY
+           # bursty regression gate: rerun the committed autoscale
+           # record (its built-in gates assert >=1 scale-out/in and the
+           # p99-TTFT win) and diff tail latency against the record
+           ab_dir="$(mktemp -d)"
+           python benchmarks/serving_bench.py --workload bursty \
+                --seed 0 --out "$ab_dir"
+           python scripts/bench_compare.py \
+                experiments/serving/bench_smollm-135m_bursty.json \
+                "$ab_dir/bench_smollm-135m_bursty.json" \
                 --threshold 0.5
            exec python benchmarks/serving_bench.py \
                 --workload multi-tenant --smoke --replicas 2 --seed 0 \

@@ -28,6 +28,13 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
         --router prefix --workload multi-tenant --tenants 4
 
+    # elastic autoscaling on bursty traffic: start one replica, scale
+    # out (jit-warm standby stacks) under sustained queue pressure and
+    # drain back when the burst passes; outputs stay bit-identical to
+    # a fixed-size run. Mix priority classes to exercise preemption:
+    PYTHONPATH=src python -m repro.launch.serve --workload bursty \
+        --autoscale --min-replicas 1 --max-replicas 3 --priorities 0 1
+
     # observability: export a Perfetto-loadable trace (request lifecycle
     # spans per slot + the dispatch timeline) and a metrics dump
     # (counters/gauges/histograms + occupancy time series); outputs stay
@@ -57,7 +64,8 @@ from repro import compat
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
-from repro.serving.engine import (Request, ServingEngine,
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy
+from repro.serving.engine import (Request, ServingEngine, bursty_requests,
                                   long_document_requests,
                                   multi_tenant_requests,
                                   repetitive_requests,
@@ -145,7 +153,16 @@ def _make_workload(args, cfg):
             args.requests, vocab_size=cfg.vocab_size,
             n_tenants=args.tenants, prefix_len=args.prefix_len,
             suffix_len=plen, max_new=tuple(args.max_new), rate=rate,
+            tenant_priorities=args.tenant_priorities,
             sampling=sampling, seed=args.seed)
+    if args.workload == "bursty":
+        return bursty_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            base_rate=args.base_rate, burst_rate=args.burst_rate,
+            burst_every=args.burst_every, burst_len=args.burst_len,
+            prompt_len=plen, max_new=tuple(args.max_new),
+            priorities=tuple(args.priorities), sampling=sampling,
+            seed=args.seed)
     if args.workload == "repetitive":
         return repetitive_requests(
             args.requests, vocab_size=cfg.vocab_size, period=args.period,
@@ -171,6 +188,7 @@ def _engine_kwargs(args, max_seq_len):
                 speculate=args.speculate, draft=args.draft,
                 ngram=args.ngram, kv_dtype=args.kv_dtype,
                 host_cache_blocks=args.host_cache_blocks,
+                priority_aging=args.priority_aging,
                 # widen the compiled top-k side output when the CLI asks
                 # for more alternatives than the engine default carries
                 max_logprobs=max(args.logprobs, 8))
@@ -185,7 +203,26 @@ def _run_engine(args, cfg, params):
     # bit-identical either way)
     tracing = bool(args.trace_out or args.metrics_out)
     obs = Observability() if tracing else NULL_OBS
-    if args.replicas > 1:
+    if args.autoscale:
+        # elastic cluster: the router starts with min_replicas enabled
+        # stacks; the rest are built up front and parked in the
+        # autoscaler's standby pool, to be activated (jit-warm) when
+        # sustained queue pressure demands it and drained back when the
+        # burst passes. Outputs stay bit-identical to any fixed size.
+        n_max = max(args.max_replicas, args.min_replicas)
+        replicas = [Replica(params, cfg, replica_id=i, obs=obs, **kwargs)
+                    for i in range(n_max)]
+        router = Router(replicas[:args.min_replicas], policy=args.router,
+                        obs=obs)
+        policy = AutoscalePolicy(
+            min_replicas=args.min_replicas, max_replicas=n_max,
+            queue_high=args.queue_high, queue_low=args.queue_low,
+            cooldown_s=args.scale_cooldown)
+        Autoscaler(router, policy=policy,
+                   standby=replicas[args.min_replicas:], obs=obs)
+        done = router.run(reqs)
+        stats = summarize_cluster(done, router.wall_time, router)
+    elif args.replicas > 1:
         replicas = [Replica(params, cfg, replica_id=i, obs=obs, **kwargs)
                     for i in range(args.replicas)]
         router = Router(replicas, policy=args.router, obs=obs)
@@ -251,7 +288,7 @@ def main():
                     metavar=("LO", "HI"))
     ap.add_argument("--workload", default="synthetic",
                     choices=["synthetic", "shared-prefix", "multi-tenant",
-                             "repetitive", "long-document"])
+                             "repetitive", "long-document", "bursty"])
     ap.add_argument("--prefix-len", type=int, default=48,
                     help="shared system-prompt length (shared-prefix / "
                          "multi-tenant)")
@@ -260,9 +297,47 @@ def main():
     ap.add_argument("--tenants", type=int, default=4,
                     help="distinct tenants, each with its own shared "
                          "prefix, interleaved arrivals (multi-tenant)")
+    ap.add_argument("--tenant-priorities", type=int, nargs="+", default=None,
+                    help="per-tenant scheduler priority classes (one int "
+                         "per tenant; higher preempts lower — an SLO mix "
+                         "for --workload multi-tenant)")
+    ap.add_argument("--base-rate", type=float, default=4.0,
+                    help="off-burst arrival rate req/s (bursty)")
+    ap.add_argument("--burst-rate", type=float, default=64.0,
+                    help="in-burst arrival rate req/s (bursty)")
+    ap.add_argument("--burst-every", type=float, default=2.0,
+                    help="burst cycle period in seconds (bursty)")
+    ap.add_argument("--burst-len", type=float, default=0.25,
+                    help="burst duration per cycle in seconds (bursty)")
+    ap.add_argument("--priorities", type=int, nargs="+", default=[0],
+                    help="priority classes drawn uniformly per request "
+                         "(bursty)")
+    ap.add_argument("--priority-aging", type=float, default=2.0,
+                    help="seconds of queue wait worth one priority class "
+                         "at admission (starvation bound; <=0 disables)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="model replicas behind the cluster router "
                          "(each a full engine stack; 1 = no router)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic cluster: start --min-replicas, scale "
+                         "out to --max-replicas under sustained queue "
+                         "pressure and drain back when idle (overrides "
+                         "--replicas)")
+    ap.add_argument("--min-replicas", type=int, default=1,
+                    help="enabled replicas at run start (--autoscale)")
+    ap.add_argument("--max-replicas", type=int, default=3,
+                    help="replica ceiling; the surplus stacks are built "
+                         "up front as the jit-warm standby pool "
+                         "(--autoscale)")
+    ap.add_argument("--queue-high", type=float, default=2.0,
+                    help="per-replica queue depth that accumulates "
+                         "toward a scale-out (--autoscale)")
+    ap.add_argument("--queue-low", type=float, default=1.0,
+                    help="per-replica load at or below which idleness "
+                         "accumulates toward a scale-in (--autoscale)")
+    ap.add_argument("--scale-cooldown", type=float, default=0.25,
+                    help="minimum seconds between scaling decisions "
+                         "(--autoscale)")
     ap.add_argument("--router", default="least-loaded",
                     choices=["rr", "least-loaded", "prefix"],
                     help="replica placement policy: round-robin, "

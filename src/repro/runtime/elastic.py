@@ -30,7 +30,11 @@ def rebalance_plan(n_old: int, n_new: int, b: int, T_remaining: int):
     total sample budget n = b*m*T constant (paper Thm 10 parameterization).
 
     Returns (new_b, new_T): we hold per-machine memory b fixed and stretch/
-    shrink T so b*m*T is preserved."""
+    shrink T so b*m*T is preserved. T rounds UP — flooring silently drops
+    up to n_new-1 outer steps' worth of samples whenever b*n_new does not
+    divide the remaining budget (e.g. 4 machines -> 3 with b*T_remaining
+    odd), and a convergence bound paid for n samples should never run on
+    fewer; overshooting by a partial step keeps b*m*T >= the old budget."""
     total = b * n_old * T_remaining
-    new_T = max(1, total // (b * n_new))
+    new_T = max(1, -(-total // (b * n_new)))
     return b, new_T

@@ -108,6 +108,10 @@ class ServingEngine:
                        evicted cached blocks demote to a host LRU of
                        that many block payloads and revive on prefix
                        hit instead of being recomputed
+    priority_aging     seconds of queue wait worth one priority class
+                       at admission (starvation bound for low-priority
+                       requests under priority scheduling; <= 0
+                       disables aging — strict class order)
 
     temperature / seed are DEPRECATED engine-wide knobs, kept as a
     back-compat shim: they map to a default SamplingParams (with a
@@ -127,6 +131,7 @@ class ServingEngine:
                  draft: str = "ngram", ngram: int = 3,
                  max_logprobs: int = 8, kv_dtype: str = "fp16",
                  host_cache_blocks: int = 0,
+                 priority_aging: float = 2.0,
                  obs: Observability = NULL_OBS):
         if cfg.frontend != "none":
             raise NotImplementedError(
@@ -186,7 +191,7 @@ class ServingEngine:
             max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
             now_fn=self._now, speculate=self.speculate, draft=draft,
             ngram=ngram, default_sampling=self.default_sampling,
-            obs=self.obs)
+            priority_aging_s=priority_aging, obs=self.obs)
         self.cache_bytes = self.runner.cache_bytes
         self.steps = 0                # decode+verify iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
@@ -232,6 +237,12 @@ class ServingEngine:
             self.obs.gauge("kv_device_bytes_gauge").set(self.cache_bytes)
             self.obs.gauge("kv_host_bytes_gauge").set(
                 self.host_cache_blocks * self.runner.block_bytes)
+
+    def align_clock(self, t0: float) -> None:
+        """Adopt a cluster clock origin WITHOUT resetting telemetry —
+        what a replica activated mid-run needs (begin_run would wipe
+        the cluster's shared metrics registry mid-flight)."""
+        self._t0 = t0
 
     def reset_prefix_cache(self) -> None:
         """Drop cached prompt blocks (e.g. between benchmark runs)."""
@@ -407,6 +418,8 @@ def multi_tenant_requests(n: int, *, vocab_size: int, n_tenants: int = 4,
                           suffix_len: Union[int, Tuple[int, int]] = (4, 16),
                           max_new: tuple = (8, 32),
                           rate: float = float("inf"),
+                          tenant_priorities: Optional[Sequence[int]] = None,
+                          tenant_weights: Optional[Sequence[float]] = None,
                           sampling: Optional[SamplingParams] = None,
                           seed: int = 0) -> List[Request]:
     """Multi-tenant workload: `n_tenants` distinct shared system prompts
@@ -419,25 +432,108 @@ def multi_tenant_requests(n: int, *, vocab_size: int, n_tenants: int = 4,
     round-robin: every tenant's prefix is cacheable, but only on
     replicas that already served that tenant — an affinity router pins
     each tenant to the replica holding its blocks, while round-robin
-    re-prefills each tenant's prefix once per replica it touches."""
+    re-prefills each tenant's prefix once per replica it touches.
+
+    Per-tenant SLO mixes: `tenant_priorities[k]` stamps tenant k's
+    requests with that scheduler priority class (an interactive tenant
+    outranks — and may preempt — a batch tenant), and `tenant_weights`
+    skews how much traffic each tenant sends. Both default to off, in
+    which case the rng draw sequence is byte-identical to the
+    pre-priority generator (committed bench records depend on it)."""
     rng = np.random.default_rng(seed)
     plens = _sample_lengths(rng, prefix_len, max(n_tenants, 1))
     prefixes = [rng.integers(0, vocab_size, int(p)).astype(np.int32)
                 for p in plens]
-    tenants = rng.integers(0, len(prefixes), n)
+    if tenant_weights is not None:
+        w = np.asarray(tenant_weights, dtype=float)
+        if len(w) != len(prefixes):
+            raise ValueError("need one tenant_weights entry per tenant")
+        tenants = rng.choice(len(prefixes), size=n, p=w / w.sum())
+    else:
+        tenants = rng.integers(0, len(prefixes), n)
+    if tenant_priorities is not None and \
+            len(tenant_priorities) != len(prefixes):
+        raise ValueError("need one tenant_priorities entry per tenant")
     arrivals = _arrivals(rng, n, rate)
     slens = _sample_lengths(rng, suffix_len, n)
     lo, hi = max_new
     out = []
     for i in range(n):
         suffix = rng.integers(0, vocab_size, int(slens[i])).astype(np.int32)
+        tenant = int(tenants[i])
         out.append(Request(
             rid=i,
-            prompt=np.concatenate([prefixes[int(tenants[i])], suffix]),
+            prompt=np.concatenate([prefixes[tenant], suffix]),
             max_new_tokens=int(rng.integers(lo, hi + 1)),
             arrival=float(arrivals[i]),
+            priority=(int(tenant_priorities[tenant])
+                      if tenant_priorities is not None else 0),
             sampling=_per_request(sampling, i)))
     return out
+
+
+def bursty_requests(n: int, *, vocab_size: int, base_rate: float = 4.0,
+                    burst_rate: float = 64.0, burst_every: float = 2.0,
+                    burst_len: float = 0.25,
+                    prompt_len: Union[int, Tuple[int, int]] = (8, 24),
+                    max_new: tuple = (8, 32),
+                    priorities: Sequence[int] = (0,),
+                    priority_weights: Optional[Sequence[float]] = None,
+                    sampling: Optional[SamplingParams] = None,
+                    seed: int = 0) -> List[Request]:
+    """Bursty (diurnal) workload: arrivals follow a two-state modulated
+    Poisson process — every `burst_every` seconds the rate switches to
+    `burst_rate` for `burst_len` seconds, then falls back to
+    `base_rate`. The cycle starts IN a burst, so a queue piles up at
+    t=0 and then drains into a sparse tail: exactly the shape that
+    makes a fixed-size cluster pay p99 TTFT during the spike while
+    sitting idle between spikes — the autoscaler's motivating traffic.
+
+    Arrival times are drawn by exact inversion of the inhomogeneous
+    Poisson integral (piecewise-constant rate), so the process is
+    seeded and reproducible like every other generator here. Each
+    request's priority class is drawn from `priorities` (uniformly, or
+    by `priority_weights`) — mix classes to exercise preemption under
+    burst pressure."""
+    if base_rate <= 0 or burst_rate <= 0:
+        raise ValueError("rates must be positive")
+    rng = np.random.default_rng(seed)
+
+    def _advance(t: float, e: float) -> float:
+        # spend exponential mass `e` walking forward through the
+        # piecewise-constant rate profile
+        while True:
+            phase = t % burst_every
+            in_burst = phase < burst_len
+            r = burst_rate if in_burst else base_rate
+            edge = burst_len if in_burst else burst_every
+            dt = edge - phase              # time left in this state
+            if e <= r * dt:
+                return t + e / r
+            e -= r * dt
+            t += dt
+
+    arrivals = []
+    t = 0.0
+    for _ in range(n):
+        t = _advance(t, rng.exponential(1.0))
+        arrivals.append(t)
+    if priority_weights is not None:
+        w = np.asarray(priority_weights, dtype=float)
+        if len(w) != len(priorities):
+            raise ValueError("need one priority_weights entry per class")
+        pidx = rng.choice(len(priorities), size=n, p=w / w.sum())
+    else:
+        pidx = rng.integers(0, len(priorities), n)
+    plens = _sample_lengths(rng, prompt_len, n)
+    lo, hi = max_new
+    return [Request(
+        rid=i,
+        prompt=rng.integers(0, vocab_size, int(plens[i])).astype(np.int32),
+        max_new_tokens=int(rng.integers(lo, hi + 1)),
+        arrival=float(arrivals[i]),
+        priority=int(priorities[int(pidx[i])]),
+        sampling=_per_request(sampling, i)) for i in range(n)]
 
 
 def long_document_requests(n: int, *, vocab_size: int,
@@ -522,10 +618,14 @@ def summarize(completions: Sequence[Completion], wall: float,
         "wall_s": round(wall, 4),
         "tokens_per_s": _rate(gen, wall),
         "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 2),
+        "ttft_p95_ms": round(float(np.percentile(ttft, 95)) * 1e3, 2),
         "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 2),
         "latency_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+        "latency_p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 2),
         "latency_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
         "tpot_p50_ms": round(float(np.percentile(per_tok, 50)) * 1e3, 2),
+        "tpot_p95_ms": round(float(np.percentile(per_tok, 95)) * 1e3, 2),
+        "tpot_p99_ms": round(float(np.percentile(per_tok, 99)) * 1e3, 2),
     }
     if engine is not None:
         stats["kv_cache_mb"] = round(engine.cache_bytes / 2**20, 2)

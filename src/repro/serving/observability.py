@@ -336,6 +336,8 @@ class Observability:
         self.gauge("blocks_reserved_gauge").set(stats.reserved_blocks)
         spilled = getattr(stats, "spilled_blocks", 0)
         self.gauge("blocks_spilled_gauge").set(spilled)
+        preempted = getattr(stats, "preempted", 0)
+        self.gauge("preempted_gauge").set(preempted)
         last = self._last_sample[0]
         if last is not None and t - last < self.sample_interval:
             return
@@ -349,6 +351,7 @@ class Observability:
             "cached_blocks": stats.cached_blocks,
             "reserved_blocks": stats.reserved_blocks,
             "spilled_blocks": spilled,
+            "preempted": preempted,
         })
 
     # -- lifecycle -------------------------------------------------------

@@ -131,6 +131,11 @@ class Replica:
         self.engine.begin_run(t0)
         self.placed = 0
 
+    def align_clock(self, t0: float) -> None:
+        """Adopt the cluster clock origin without resetting telemetry
+        (mid-run activation — see ServingEngine.align_clock)."""
+        self.engine.align_clock(t0)
+
     def reset_prefix_cache(self) -> None:
         self.engine.reset_prefix_cache()
 

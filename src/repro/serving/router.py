@@ -148,6 +148,14 @@ class Router:
                                             replica=r.replica_id)
             for r in self.replicas}
         self._c_requeued = self._obs.counter("router_requeued_total")
+        # completions already collected from replicas REMOVED mid-run
+        # (autoscaler scale-in) — merged back by run()
+        self._done: List[Completion] = []
+        # the active stream() event sink, propagated onto replicas
+        # added mid-run so an elastic cluster streams seamlessly
+        self._event_sink = None
+        # attached by Autoscaler.attach(); ticked once per _drive sweep
+        self.autoscaler = None
 
     def _now(self) -> float:
         """Seconds on the cluster clock (0.0 before the first run)."""
@@ -336,6 +344,49 @@ class Router:
         self._by_id(replica_id).enabled = True
 
     # ------------------------------------------------------------------
+    # elastic membership (the autoscaler's levers)
+    # ------------------------------------------------------------------
+
+    def add_replica(self, rep: Replica) -> None:
+        """Join a replica to the cluster, enabled, mid-run or between
+        runs. Mid-run joiners adopt the cluster clock WITHOUT a
+        begin_run (which would wipe the shared metrics registry) and
+        inherit the active stream() event sink."""
+        if any(r.replica_id == rep.replica_id for r in self.replicas):
+            raise ValueError(f"replica {rep.replica_id} already joined")
+        self.replicas.append(rep)
+        rep.enabled = True
+        if rep.replica_id not in self._c_placed:
+            self._c_placed[rep.replica_id] = self._obs.counter(
+                "router_placed_total", replica=rep.replica_id)
+        self._chunk_len = max(1, min(
+            getattr(r.engine, "block_size", 16) for r in self.replicas))
+        if self._t0 is not None:
+            rep.align_clock(self._t0)
+        if self._event_sink is not None:
+            rep.scheduler.on_event = self._event_sink
+
+    def remove_replica(self, replica_id: int) -> Replica:
+        """Detach a DRAINED replica (scale-in): its completions are
+        held for run() and its engine stack returns to the caller
+        (the autoscaler's standby pool keeps it jit-warm). Refuses to
+        remove a replica that still has work or the last one."""
+        rep = self._by_id(replica_id)
+        if rep.has_work:
+            raise RuntimeError(
+                f"replica {replica_id} still has work — disable() it "
+                f"and let it drain before removing")
+        if len(self.replicas) == 1:
+            raise RuntimeError("cannot remove the last replica")
+        self.replicas.remove(rep)
+        self._done.extend(rep.take_completions())
+        if self._event_sink is not None:
+            rep.scheduler.on_event = None
+        self._chunk_len = max(1, min(
+            getattr(r.engine, "block_size", 16) for r in self.replicas))
+        return rep
+
+    # ------------------------------------------------------------------
     # cluster run / stream
     # ------------------------------------------------------------------
 
@@ -357,6 +408,11 @@ class Router:
         self._probe_memo.clear()
         self._rr = 0
         self.requeued = 0
+        self._done = []
+        if self.autoscaler is not None:
+            # retire autoscaled replicas to standby FIRST so only the
+            # base set gets begin_run (and one shared registry reset)
+            self.autoscaler.begin_run(t0)
         for rep in self.replicas:
             rep.begin_run(t0)
         while idx < len(pending) or self.has_work:
@@ -365,6 +421,8 @@ class Router:
                 self.submit(pending[idx])
                 idx += 1
             self.place()
+            if self.autoscaler is not None:
+                self.autoscaler.tick(now)
             stepped = False
             for rep in self.replicas:
                 if rep.has_work:
@@ -389,7 +447,7 @@ class Router:
         timing differ."""
         for _ in self._drive(requests):
             pass
-        done: List[Completion] = []
+        done: List[Completion] = list(self._done)   # scaled-in replicas
         for rep in self.replicas:
             done.extend(rep.take_completions())
         done.sort(key=lambda c: c.t_done)
@@ -402,20 +460,24 @@ class Router:
         `run()`. Like ServingEngine.stream, the generator must be
         consumed to exhaustion."""
         buf: List[StreamEvent] = []
-        prev = [rep.scheduler.on_event for rep in self.replicas]
+        prev = {rep.replica_id: rep.scheduler.on_event
+                for rep in self.replicas}
+        self._event_sink = buf.append        # added replicas inherit it
         for rep in self.replicas:
-            rep.scheduler.on_event = buf.append
+            rep.scheduler.on_event = self._event_sink
         try:
             for _ in self._drive(requests):
                 while buf:
                     yield buf.pop(0)
             while buf:
                 yield buf.pop(0)
+            self._done = []
             for rep in self.replicas:
                 rep.take_completions()
         finally:
-            for rep, p in zip(self.replicas, prev):
-                rep.scheduler.on_event = p
+            self._event_sink = None
+            for rep in self.replicas:
+                rep.scheduler.on_event = prev.get(rep.replica_id)
 
 
 def summarize_cluster(completions: Sequence[Completion], wall: float,
@@ -438,6 +500,8 @@ def summarize_cluster(completions: Sequence[Completion], wall: float,
             "prompt_tokens": sched.prompt_tokens,
             "cached_prompt_tokens": sched.cached_prompt_tokens,
             "prefix_hit_requests": sched.prefix_hit_requests,
+            "preemptions": sched.preemptions,
+            "resumes": sched.resumes,
             "warm_blocks": snap.cached_blocks,
             "indexed_blocks": snap.indexed_blocks,
         })
@@ -449,6 +513,10 @@ def summarize_cluster(completions: Sequence[Completion], wall: float,
         "prompt_tokens": sum(p["prompt_tokens"] for p in per),
         "cached_prompt_tokens": sum(p["cached_prompt_tokens"]
                                     for p in per),
+        "preemptions": sum(p["preemptions"] for p in per),
+        "resumes": sum(p["resumes"] for p in per),
         "per_replica": per,
     }
+    if router.autoscaler is not None:
+        stats["cluster"]["autoscaler"] = router.autoscaler.summary()
     return stats

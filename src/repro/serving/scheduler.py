@@ -18,12 +18,32 @@ runner). It owns every request-level decision and no device state:
     truncates the accepted run at the stop and rolls the rest back —
     recurrent state commits at the truncated length and the chain's
     unused block claims are freed.
-  * FCFS queue with bucketed batch formation — admission picks the
-    oldest waiting request, peeks its prefix-cache match to find its
-    suffix-length bucket, then collects further queued requests that
-    fall in the SAME bucket (bounded queue-jumping: other buckets keep
-    their place) until slots, blocks, or the prefill batch width run
-    out. The whole group is admitted in ONE `runner.prefill` dispatch.
+  * priority queue with bucketed batch formation — admission orders
+    the queue by (effective priority desc, submit order), where
+    effective priority is the request's static class plus an aging
+    boost (+1 class per `priority_aging_s` seconds waited, so a
+    low-priority request overtakes class p+k after at most
+    k * priority_aging_s seconds — the starvation bound; equal-class
+    traffic stays FCFS). The head request's prefix-cache match picks
+    its suffix-length bucket, then further queued requests in the SAME
+    bucket join (bounded queue-jumping: other buckets keep their
+    place) until slots, blocks, or the prefill batch width run out.
+    The whole group is admitted in ONE `runner.prefill` dispatch.
+  * preemption with bit-identical resume — when a waiting request's
+    static class outranks a running lane's and admission is blocked
+    (no free lane, or the pool can't cover the reservation),
+    `preempt()` evicts the weakest running lane: every FULL block of
+    its prompt+generated KV is published in the prefix index first, so
+    the teardown decrefs park them in the cached-free pool instead of
+    losing them, and a resume request (prompt' = the tokens whose KV
+    was already computed) re-enters the queue at the original class
+    and submit order. Resume is a plain re-admission: the full blocks
+    come back as prefix-cache hits, the partial tail recomputes, and
+    the resumed prefill's sampled token — keyed by position exactly
+    like the decode step it replays — is asserted equal to the token
+    captured at preemption, then suppressed (never re-emitted). A
+    preempted-then-resumed request is bit-identical to an
+    uninterrupted run.
   * incremental block allocation under a conservative budget —
     admission allocates only the prompt's blocks and RESERVES (but does
     not bind) the ceil((prompt + max_new) / block_size) remainder as a
@@ -84,6 +104,8 @@ class Request:
     arrival: float = 0.0          # seconds on the engine clock (open loop)
     eos_id: Optional[int] = None
     sampling: Optional[SamplingParams] = None
+    priority: int = 0             # scheduling class: higher admits first
+    #                               and may preempt strictly lower classes
     trace: Optional[Dict[str, float]] = None
     # lifecycle timestamps on the shared run clock, stamped only while
     # observability tracing is on (router stamps 'queued'/'routed', the
@@ -137,6 +159,9 @@ class SchedulerStats:
     indexed_blocks: int           # blocks published in the prefix index
     reserved_blocks: int          # reserved-but-unbound generation budget
     spilled_blocks: int = 0       # host-tier block payloads (spill tier)
+    preempted: int = 0            # evicted lanes awaiting resume (their
+    #                               resume requests also count in
+    #                               queue_depth — load sees them once)
 
     @property
     def load(self) -> int:
@@ -196,6 +221,27 @@ class _Plan:
                                           len(self.req.prompt) - 1)
 
 
+@dataclasses.dataclass
+class _ResumeState:
+    """Everything a preempted lane needs to continue exactly where it
+    stopped, keyed by rid while its resume request waits in the queue.
+    The KV itself is NOT here — it sits in the cached-free pool (full
+    blocks, published at preemption) until the resume admission revives
+    it as a prefix match."""
+    req: Request                  # the ORIGINAL request object
+    sp: SamplingParams            # resolved sampling (original max_new)
+    stops: List[List[int]]
+    out: List[int]
+    hist: List[int]
+    pos: int                      # next position to feed at resume
+    pending: int                  # token to feed there (already emitted)
+    t_admit: float                # original admission time (TTFT keeps)
+    t_first: float
+    cached: int                   # original admission cache-hit tokens
+    lps: Optional[List[float]]
+    alts: Optional[List[Tuple[List[int], List[float]]]]
+
+
 class Scheduler:
     """Request lifecycle over a BlockAllocator and a ModelRunner."""
 
@@ -205,6 +251,7 @@ class Scheduler:
                  now_fn: Callable[[], float], speculate: int = 0,
                  draft: str = "ngram", ngram: int = 3,
                  default_sampling: Optional[SamplingParams] = None,
+                 priority_aging_s: float = 2.0,
                  obs: Observability = NULL_OBS):
         self.allocator = allocator
         self.runner = runner
@@ -220,6 +267,8 @@ class Scheduler:
         self._c_cached = self._obs.counter("cached_prompt_tokens_total")
         self._c_proposed = self._obs.counter("spec_proposed_total")
         self._c_accepted = self._obs.counter("spec_accepted_total")
+        self._c_preempted = self._obs.counter("scheduler_preempted_total")
+        self._c_resumed = self._obs.counter("scheduler_resumed_total")
         self.num_slots = num_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -227,6 +276,7 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         self._now = now_fn
         self.speculate = max(0, speculate)
+        self.priority_aging_s = float(priority_aging_s)
         self.default_sampling = default_sampling or SamplingParams()
         # one proposer per lane: drafting is per-sequence state-free
         # today (n-gram lookup), but the ownership point is the seam a
@@ -256,6 +306,11 @@ class Scheduler:
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._reserved_budget = 0     # sum of live slots' budgets
         self._chunk_rr = 0            # round-robin over chunked prefills
+        self._submit_seq = 0          # FCFS tiebreak within a priority
+        # rid -> _ResumeState for preempted lanes whose resume request
+        # is waiting in the queue (take_queued never migrates these:
+        # their cached KV lives on THIS replica's allocator)
+        self._resume_state: Dict[int, _ResumeState] = {}
         self.completions: List[Completion] = []
         self.on_event: Optional[Callable[[StreamEvent], None]] = None
         self.reset_stats()
@@ -268,6 +323,8 @@ class Scheduler:
         self.accepted_tokens = 0      # draft tokens accepted
         self.greedy_requests = 0      # submitted with temperature == 0
         self.sampled_requests = 0     # submitted with temperature > 0
+        self.preemptions = 0          # lanes evicted by preempt()
+        self.resumes = 0              # preempted lanes re-admitted
 
     # ------------------------------------------------------------------
     # queue
@@ -304,6 +361,11 @@ class Scheduler:
             self.greedy_requests += 1
         else:
             self.sampled_requests += 1
+        # admission-order stamps (object attributes, not dataclass
+        # fields: a Request resubmitted after drain/failover re-stamps)
+        req._seq = self._submit_seq
+        req._t_submit = self._now()
+        self._submit_seq += 1
         if self._obs.enabled:
             self._c_submitted.inc()
             if req.trace is None:
@@ -327,7 +389,8 @@ class Scheduler:
             cached_blocks=self.allocator.num_cached,
             indexed_blocks=self.allocator.num_indexed,
             reserved_blocks=self._reserved_budget,
-            spilled_blocks=getattr(self.allocator, "num_spilled", 0))
+            spilled_blocks=getattr(self.allocator, "num_spilled", 0),
+            preempted=len(self._resume_state))
 
     def slot_acceptance_rates(self) -> List[Optional[float]]:
         """Rolling per-slot draft acceptance rate (accepted/proposed over
@@ -346,14 +409,22 @@ class Scheduler:
         order (drain/failover: the router requeues them on another
         replica). Admitted requests keep their slots and run to
         completion. The submit-time greedy/sampled counters are rolled
-        back so this scheduler's stats count only work it kept."""
-        out = list(self._queue)
-        self._queue.clear()
-        for r in out:
+        back so this scheduler's stats count only work it kept. Resume
+        requests for preempted lanes STAY: their cached KV and resume
+        state live on this replica's allocator, so migrating them would
+        turn a warm resume into a cold (and state-less) restart."""
+        out = []
+        kept: Deque[Request] = deque()
+        for r in self._queue:
+            if r.rid in self._resume_state:
+                kept.append(r)
+                continue
+            out.append(r)
             if r.sampling.greedy:
                 self.greedy_requests -= 1
             else:
                 self.sampled_requests -= 1
+        self._queue = kept
         return out
 
     def _free_slots(self) -> List[int]:
@@ -453,13 +524,58 @@ class Scheduler:
                 return True
         return False
 
+    def _eff_priority(self, req: Request, now: float) -> float:
+        """Effective ADMISSION priority: the static class plus an aging
+        boost of one class per `priority_aging_s` seconds waited, so a
+        class-p request behind class p+k traffic overtakes it after at
+        most k * priority_aging_s seconds (the starvation bound).
+        Equal-class traffic stays FCFS (older = bigger boost). Aging
+        raises admission rank only — never eviction rights (see
+        `_preempt_below`). priority_aging_s <= 0 disables aging."""
+        if self.priority_aging_s <= 0:
+            return float(req.priority)
+        waited = max(now - getattr(req, "_t_submit", now), 0.0)
+        return req.priority + waited / self.priority_aging_s
+
+    def _admission_order(self) -> List[Request]:
+        now = self._now()
+        return sorted(self._queue,
+                      key=lambda r: (-self._eff_priority(r, now),
+                                     getattr(r, "_seq", 0)))
+
+    def _preempt_below(self, priority: int) -> bool:
+        """Evict the weakest running lane whose STATIC class is strictly
+        below `priority` (lowest class first, most recently admitted
+        first within a class — oldest work is disturbed last). Static
+        compare: an aged low-priority request earns admission rank, not
+        the right to evict. Returns True when a lane was preempted."""
+        top = self.runner.prefill_buckets[-1]
+        cands = [i for i, s in enumerate(self._slots)
+                 if s is not None and s.prefill_pos < 0
+                 and s.req.priority < priority
+                 # without chunked admission a resume whose recompute
+                 # suffix outgrew the bucket grid could never re-admit
+                 # (cached blocks may be evicted meanwhile) — skip it
+                 and (self.runner.prefill_chunk or s.pos <= top)]
+        if not cands:
+            return False
+        victim = min(cands, key=lambda i: (self._slots[i].req.priority,
+                                           -self._slots[i].t_admit))
+        return self.preempt(victim) is not None
+
     def admit(self) -> None:
-        """Form same-bucket groups from the queue and admit each group
-        in one batched prefill dispatch, while lanes and blocks last.
-        A request whose prefix overlaps a groupmate's beyond what the
-        cache already holds is deferred one group (see
-        `_defer_for_group_prefix`) so it shares blocks instead of
-        recomputing them.
+        """Form same-bucket groups from the queue — scanned in
+        (effective priority desc, submit order), see `_eff_priority` —
+        and admit each group in one batched prefill dispatch, while
+        lanes and blocks last. A request whose prefix overlaps a
+        groupmate's beyond what the cache already holds is deferred one
+        group (see `_defer_for_group_prefix`) so it shares blocks
+        instead of recomputing them. When the top waiting class
+        outranks a running lane and admission is blocked — every lane
+        busy, or the pool can't cover the head request's reservation —
+        the weakest strictly-lower lane is preempted (KV parked in the
+        cached-free pool, resume queued; see `preempt`) and admission
+        retries.
 
         A prompt whose suffix exceeds the largest prefill bucket is
         routed to chunked admission instead: its blocks and budget are
@@ -470,46 +586,61 @@ class Scheduler:
         suffix is rejected with an actionable error (suffix_bucket)
         rather than falling through to an oversized jit variant."""
         while True:
+            if self._queue and not self._free_slots():
+                top = max(r.priority for r in self._queue)
+                if not self._preempt_below(top):
+                    return
             free = self._free_slots()
             if not free or not self._queue:
                 return
             cap = min(len(free), self.runner.prefill_max_batch)
             plans: List[_Plan] = []
             bucket = None
-            skipped: List[Request] = []
             chunked = False
-            while self._queue and len(plans) < cap:
-                req = self._queue[0]
+            taken: set = set()            # id() of admitted requests
+            order = self._admission_order()
+            j = 0
+            while j < len(order) and len(plans) < cap:
+                req = order[j]
                 match = self._match(req)  # peek: takes no references
                 if self._defer_for_group_prefix(req, match, plans):
-                    skipped.append(self._queue.popleft())
+                    j += 1
                     continue
                 suf = len(req.prompt) - min(
                     match.tokens(self.block_size), len(req.prompt) - 1)
                 if (self.runner.prefill_chunk
                         and suf > self.runner.prefill_buckets[-1]):
                     if plans:             # needs its own admission
-                        skipped.append(self._queue.popleft())
+                        j += 1
                         continue
                     plan = self._reserve(req, free[0], match)
                     if plan is None:
+                        if self._preempt_below(req.priority):
+                            continue      # blocks freed; retry the head
                         break             # pool exhausted; retry later
-                    self._queue.popleft()
+                    taken.add(id(req))
                     self._begin_chunked(plan)
                     chunked = True
                     break                 # slot map changed; reform
                 b = self.runner.suffix_bucket(suf)
                 if bucket is not None and b != bucket:
-                    skipped.append(self._queue.popleft())
+                    j += 1
                     continue
                 plan = self._reserve(req, free[len(plans)], match)
                 if plan is None:
+                    if not plans and self._preempt_below(req.priority):
+                        continue          # blocks freed; retry the head
                     break                 # pool exhausted; retry later
-                self._queue.popleft()
+                taken.add(id(req))
                 plans.append(plan)
                 bucket = b
-            for req in reversed(skipped):
-                self._queue.appendleft(req)
+                j += 1
+            if taken:
+                # skipped requests keep their queue positions: the
+                # queue itself stays in submit order (take_queued and
+                # drain preserve FCFS), only the admitted leave it
+                self._queue = deque(r for r in self._queue
+                                    if id(r) not in taken)
             if plans:
                 self._dispatch(plans)
             elif not chunked:
@@ -543,6 +674,10 @@ class Scheduler:
                 lps=[] if sp.logprobs else None,
                 alts=[] if sp.logprobs else None)
             self._slots[p.slot] = s
+            rec = self._resume_state.pop(p.req.rid, None)
+            if rec is not None:
+                self._resume_slot(p.slot, s, rec, int(tok))
+                continue
             if self._stop_cut(s, [int(tok)]) is not None:
                 s.stopped = True
             self._emit(s, [int(tok)], [float(tok_lp)],
@@ -622,6 +757,10 @@ class Scheduler:
                 s.req.prompt, [int(b) for b in s.table_row])
         self.runner.write_table(i, s.table_row)
         s.prefill_pos = -1
+        rec = self._resume_state.pop(s.req.rid, None)
+        if rec is not None:               # a resume whose recompute
+            self._resume_slot(i, s, rec, int(first[0]))   # went chunked
+            return True
         s.pending = int(first[0])
         s.t_first = self._now()
         if self._stop_cut(s, [s.pending]) is not None:
@@ -630,6 +769,118 @@ class Scheduler:
                    self._slice_alt(s, alt, 0))
         self._maybe_finish(i)
         return True
+
+    # ------------------------------------------------------------------
+    # preemption + bit-identical resume
+    # ------------------------------------------------------------------
+
+    def preempt(self, slot_id: Optional[int] = None) -> Optional[int]:
+        """Evict a running lane mid-generation, keeping its computed KV
+        warm: every FULL block of prompt+generated KV (positions
+        0..pos-1 = hist[:pos]) is published in the prefix index FIRST,
+        so the teardown decrefs park those blocks in the cached-free
+        pool instead of freeing them blind. A resume request — prompt'
+        = hist[:pos], the tokens whose KV was already computed, at the
+        ORIGINAL class and submit order — re-enters the queue, and the
+        original outputs/timestamps stash in `_resume_state` until its
+        re-admission restores them (`_resume_slot`). Resume is then a
+        plain admission: full blocks come back as prefix-cache hits and
+        only the partial tail block (plus the last position, which
+        `_reserve` always recomputes) costs prefill; if pressure
+        evicted the parked blocks meanwhile, resume just recomputes
+        more — still bit-identical, never wrong.
+
+        With slot_id None the weakest lane is chosen: lowest static
+        class first, most recently admitted within a class. Lanes still
+        mid-chunked-prefill are not preemptible (no first token yet),
+        nor — without chunked admission — lanes whose recompute suffix
+        outgrew the prefill bucket grid. Returns the evicted slot id,
+        or None when no lane is preemptible."""
+        if slot_id is None:
+            top = self.runner.prefill_buckets[-1]
+            cands = [i for i, s in enumerate(self._slots)
+                     if s is not None and s.prefill_pos < 0
+                     and (self.runner.prefill_chunk or s.pos <= top)]
+            if not cands:
+                return None
+            slot_id = min(cands,
+                          key=lambda i: (self._slots[i].req.priority,
+                                         -self._slots[i].t_admit))
+        s = self._slots[slot_id]
+        if s is None or s.prefill_pos >= 0:
+            return None
+        # KV exists for positions 0..pos-1; park the full blocks
+        if self.prefix_cache:
+            self.allocator.register_prefix(
+                np.asarray(s.hist[:s.pos], np.int32),
+                [int(b) for b in s.table_row])
+        self._resume_state[s.req.rid] = _ResumeState(
+            req=s.req, sp=s.sp, stops=s.stops, out=s.out, hist=s.hist,
+            pos=s.pos, pending=s.pending, t_admit=s.t_admit,
+            t_first=s.t_first, cached=s.cached, lps=s.lps, alts=s.alts)
+        # the resume request's budget math matches the uninterrupted
+        # run: ceil((pos + remaining) / bs) == ceil((P + max_new) / bs)
+        remaining = len(s.req.prompt) + s.sp.max_new_tokens - s.pos
+        resume = Request(
+            rid=s.req.rid, prompt=np.asarray(s.hist[:s.pos], np.int32),
+            arrival=s.req.arrival,
+            sampling=dataclasses.replace(s.sp,
+                                         max_new_tokens=remaining),
+            priority=s.req.priority, trace=s.req.trace)
+        resume._seq = getattr(s.req, "_seq", 0)
+        resume._t_submit = getattr(s.req, "_t_submit", self._now())
+        # teardown mirrors _maybe_finish (no Completion): indexed
+        # blocks park cached-free, the rest return to the free list
+        for b in s.table_row:
+            if b != NULL_BLOCK:
+                self.allocator.decref(int(b))
+        if s.cow_block is not None:       # reserved but never written
+            self.allocator.decref(s.cow_block)
+        self._reserved_budget -= s.budget
+        self.runner.clear_table(slot_id)
+        self._slots[slot_id] = None
+        self._queue.append(resume)
+        self.preemptions += 1
+        self._c_preempted.inc()
+        if self._obs.enabled:
+            self._obs.instant(slot_id, "preempt", "scheduler",
+                              self._now(), rid=s.req.rid, pos=s.pos,
+                              generated=len(s.out),
+                              priority=s.req.priority)
+        return slot_id
+
+    def _resume_slot(self, slot_id: int, s: _Slot, rec: _ResumeState,
+                     tok: int) -> None:
+        """Re-arm a freshly admitted resume lane with its pre-preemption
+        identity: original request/sampling (so the max_new finish check
+        and Completion fields see the uninterrupted view), accumulated
+        outputs, and timestamps (TTFT is unchanged by preemption). The
+        recomputed token is NOT re-emitted — it was already emitted
+        before the preemption; position-keyed sampling makes the resume
+        prefill (keyed at pos-1, like the dispatch it replays) land the
+        very same token, which is asserted: it IS the bit-identity
+        invariant."""
+        assert s.pos == rec.pos, (s.pos, rec.pos)
+        assert tok == rec.pending, (
+            f"resume replay diverged for rid {rec.req.rid}: "
+            f"recomputed {tok} != pending {rec.pending} at {rec.pos}")
+        s.req = rec.req
+        s.sp = rec.sp
+        s.stops = rec.stops
+        s.out = rec.out
+        s.hist = rec.hist
+        s.pending = rec.pending
+        s.t_admit = rec.t_admit
+        s.t_first = rec.t_first
+        s.cached = rec.cached
+        s.lps = rec.lps
+        s.alts = rec.alts
+        self.resumes += 1
+        self._c_resumed.inc()
+        if self._obs.enabled:
+            self._obs.instant(slot_id, "resume", "scheduler",
+                              self._now(), rid=rec.req.rid, pos=rec.pos,
+                              generated=len(rec.out))
 
     # ------------------------------------------------------------------
     # emission + unified stop handling (eos == a one-token stop seq)

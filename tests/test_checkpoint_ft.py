@@ -110,6 +110,22 @@ def test_elastic_rebalance():
     assert T == 10
 
 
+def test_elastic_rebalance_conserves_budget():
+    """T rounds UP when b*n_new does not divide the remaining budget —
+    flooring would silently drop up to n_new-1 steps' worth of samples
+    (4->3 machines with an odd product used to plan 6*2*3=36 < 40)."""
+    from repro.runtime.elastic import rebalance_plan
+    b, T = rebalance_plan(n_old=4, n_new=3, b=2, T_remaining=5)
+    assert T == 7                   # ceil(40 / 6), not floor = 6
+    for n_old, n_new, bb, tr in [(4, 3, 2, 5), (16, 7, 3, 11),
+                                 (5, 2, 1, 1), (2, 9, 4, 13)]:
+        b, T = rebalance_plan(n_old=n_old, n_new=n_new, b=bb,
+                              T_remaining=tr)
+        assert b * n_new * T >= bb * n_old * tr   # never fewer samples
+        # and never overshoots by a full extra outer step
+        assert b * n_new * (T - 1) < bb * n_old * tr
+
+
 def test_train_driver_resume(tmp_path):
     """train.py --resume continues from the checkpoint (integration)."""
     from repro.launch.train import train
