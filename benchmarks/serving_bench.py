@@ -31,7 +31,12 @@ Workloads (--workload):
                  priority classes — an elastically autoscaled 1..3
                  replica cluster vs a fixed single replica, gated on
                  >= 1 scale-out AND scale-in, a strict p99 TTFT win for
-                 the autoscaled arm, and bit-identity of both arms
+                 the autoscaled arm, and bit-identity of both arms;
+                 plus an SLO arm (declared TTFT objective + aggressive
+                 per-request deadlines, shedding armed) gated on burn
+                 rate > 1 during the burst, >= 1 shed or deferral, and
+                 the streaming sketch's p99 TTFT within its declared
+                 relative-error bound of the exact nearest-rank p99
 
 With --replicas N (> 1) the record gains CLUSTER arms: the same
 workload through a Router over N full replica engine stacks, once per
@@ -111,6 +116,7 @@ from repro.serving.observability import (Observability, metrics_dump,
 from repro.serving.replica import Replica
 from repro.serving.router import POLICIES, Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
+from repro.serving.slo import SLOPolicy, SLOTracker
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "serving")
@@ -482,6 +488,73 @@ def _run_bursty(args) -> dict:
     assert asc["scale_in_events"] >= 1, "idle tail never scaled in"
     assert auto_stats["ttft_p99_ms"] < fixed_stats["ttft_p99_ms"], \
         "autoscaled arm did not improve p99 TTFT under burst"
+
+    # ---- SLO arm: the same burst against a declared TTFT objective ----
+    # a fixed single replica (the arm whose burst TTFTs blow any sane
+    # objective — exactly when the SLO layer must act) with the tracker
+    # on, aggressive per-request deadlines stamped, and shedding ARMED.
+    # Gates: (a) the burst drives the fast-window burn rate past 1.0
+    # (budget is being spent faster than sustainable); (b) under a
+    # deadline far below the fixed arm's burst TTFT, at least one
+    # request is shed or deferred; (c) the streaming sketch's p99 TTFT
+    # lands within its declared relative-error bound of the exact
+    # nearest-rank p99 over the same observations — the bounded-memory
+    # estimator is trusted only because this gate pins it to ground
+    # truth every run.
+    slo_policy = SLOPolicy(ttft_objective_ms=50.0, error_budget=0.1)
+    slo_tracker = SLOTracker(slo_policy)
+    deadline_ms = 250.0
+    slo_reqs = [dataclasses.replace(
+        r, sampling=dataclasses.replace(r.sampling or SamplingParams(),
+                                        deadline_ms=deadline_ms))
+        for r in reqs]
+    slo_engine = ServingEngine(params, cfg, slo_tracker=slo_tracker,
+                               slo_shed=True, **kwargs)
+    slo_engine.run(list(warm))        # jit-warm (deadlines are generous
+    slo_engine.reset_prefix_cache()   # at arrival=0: nothing sheds)
+    slo_tracker.reset()
+    slo_done = slo_engine.run(list(slo_reqs))
+    slo_stats = summarize(slo_done, slo_engine.wall_time, slo_engine)
+    sched = slo_engine.scheduler
+    served = [c for c in slo_done if c.finish_reason != "shed"]
+    ttfts = sorted(max(c.t_first_token - c.arrival, 0.0) for c in served)
+    # nearest-rank p99 — the same estimator the sketch uses, so the
+    # relative-error bound holds by construction, not by luck
+    exact_p99 = ttfts[min(-(-99 * len(ttfts) // 100) - 1, len(ttfts) - 1)]
+    sketch_p99 = slo_tracker.ttft_quantile(0.99)
+    rel = abs(sketch_p99 - exact_p99) / max(exact_p99, 1e-12)
+    within = rel <= slo_tracker.rel_err + 1e-9
+    peak_fast = slo_tracker.peak_burn["fast"]
+    slo_gate = {
+        "ttft_objective_ms": slo_policy.ttft_objective_ms,
+        "deadline_ms": deadline_ms,
+        "burn_rate_detected": peak_fast > 1.0,
+        "peak_burn_fast": round(peak_fast, 3),
+        "shed": sched.shed_requests,
+        "deferrals": sched.deferrals,
+        "shed_or_deferred": sched.shed_requests + sched.deferrals >= 1,
+        "sketch_p99_ttft_ms": round(sketch_p99 * 1e3, 3),
+        "exact_p99_ttft_ms": round(exact_p99 * 1e3, 3),
+        "sketch_rel_err": round(rel, 6),
+        "sketch_p99_within_bound": within,
+    }
+    record["slo"] = slo_stats
+    record["slo_gate"] = slo_gate
+    print(f"slo_peak_burn_fast,{slo_gate['peak_burn_fast']},"
+          f"x budget over the {slo_policy.fast_window_s}s window "
+          f"(objective {slo_policy.ttft_objective_ms}ms)")
+    print(f"slo_shed,{sched.shed_requests},requests shed "
+          f"({sched.deferrals} deferred) under {deadline_ms}ms deadline")
+    print(f"slo_sketch_p99_ttft_ms,{slo_gate['sketch_p99_ttft_ms']},"
+          f"vs {slo_gate['exact_p99_ttft_ms']} exact "
+          f"(rel err {slo_gate['sketch_rel_err']})")
+    assert slo_gate["burn_rate_detected"], \
+        "burst never drove TTFT burn rate past 1.0"
+    assert slo_gate["shed_or_deferred"], \
+        "aggressive deadline shed/deferred nothing"
+    assert within, (f"sketch p99 off by {rel:.4f} relative "
+                    f"(bound {slo_tracker.rel_err})")
+
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"bench_{args.arch}_bursty.json")
     with open(path, "w") as f:

@@ -60,6 +60,13 @@ METRICS: List[Tuple[str, bool]] = [
     ("autoscale_gate.ttft_p99_win", True),
     ("autoscale_gate.scale_out_events", True),
     ("autoscale_gate.scale_in_events", True),
+    # SLO arm: the burn-rate detection, shed/defer actuation, and the
+    # sketch-vs-exact p99 accuracy bound must all keep holding (bools
+    # compare as 0/1 — a flip to 0 is a >100% regression)
+    ("slo.tokens_per_s", True),
+    ("slo_gate.burn_rate_detected", True),
+    ("slo_gate.shed_or_deferred", True),
+    ("slo_gate.sketch_p99_within_bound", True),
 ]
 
 

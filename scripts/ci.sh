@@ -45,7 +45,15 @@
 #                              # the metrics dump, autoscaled outputs
 #                              # bit-identical to a fixed-size run) and
 #                              # the bursty regression gate against the
-#                              # committed record
+#                              # committed record (incl. its SLO arm:
+#                              # burn rate > 1 in-burst, >= 1 shed or
+#                              # deferral, sketch p99 within its bound)
+#                              # + the SLO smoke: serve.py with a TTFT
+#                              # objective + --slo-shed + the flight
+#                              # recorder; the metrics dump must carry
+#                              # the shed counter, burn-rate gauges and
+#                              # quantile sketches, and the flight dump
+#                              # must schema-validate
 #   scripts/ci.sh <pytest args...>   # passthrough (back-compat)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -227,6 +235,40 @@ PY
                 experiments/serving/bench_smollm-135m_bursty.json \
                 "$ab_dir/bench_smollm-135m_bursty.json" \
                 --threshold 0.5
+           # SLO smoke: serve.py end-to-end on the burst with a TTFT
+           # objective, shedding armed under an aggressive deadline,
+           # and the flight recorder on — the metrics dump must carry
+           # the shed counter + burn-rate gauges + quantile sketches,
+           # and the anomaly dump must be a schema-valid Perfetto trace
+           slo_dir="$(mktemp -d)"
+           python -m repro.launch.serve --workload bursty --requests 20 \
+                --slots 2 --prompt-len 8 16 --max-new 2 4 \
+                --burst-rate 400 --base-rate 2 --burst-every 30 \
+                --burst-len 0.04 --seed 0 \
+                --slo-ttft-ms 20 --slo-shed --deadline-ms 120 \
+                --flight-recorder "$slo_dir/flight.json" \
+                --metrics-out "$slo_dir/metrics.json"
+           python - "$slo_dir" <<'PY'
+import json, sys
+from repro.serving.observability import (validate_metrics_dump,
+                                         validate_trace_events)
+d = sys.argv[1]
+with open(f"{d}/metrics.json") as f:
+    doc = json.load(f)
+assert not validate_metrics_dump(doc), "metrics dump invalid"
+names = {c["name"] for c in doc["counters"]}
+assert "slo_shed_total" in names, f"no shed counter ({sorted(names)})"
+gauges = {g["name"] for g in doc["gauges"]}
+assert {"slo_burn_rate_fast_gauge",
+        "slo_burn_rate_slow_gauge"} <= gauges, f"burn gauges missing"
+assert doc.get("sketches"), "quantile sketches missing from dump"
+assert doc.get("slo", {}).get("peak_burn"), "slo snapshot missing"
+with open(f"{d}/flight.json") as f:
+    errs = validate_trace_events(json.load(f))
+assert not errs, errs
+print("slo smoke: shed counter + burn gauges + sketches + "
+      "flight dump valid")
+PY
            exec python benchmarks/serving_bench.py \
                 --workload multi-tenant --smoke --replicas 2 --seed 0 \
                 --out "$(mktemp -d)" ;;

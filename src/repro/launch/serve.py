@@ -42,6 +42,14 @@ throughput/latency telemetry.
     PYTHONPATH=src python -m repro.launch.serve --requests 8 \
         --trace-out trace.json --metrics-out metrics.json
 
+    # SLO layer: declare a TTFT objective (streaming latency sketches +
+    # burn-rate windows), shed hopeless requests against a per-request
+    # deadline, scale on burn rate instead of queue depth, and arm the
+    # anomaly flight recorder on diurnal (sinusoidal-rate) traffic:
+    PYTHONPATH=src python -m repro.launch.serve --workload diurnal \
+        --slo-ttft-ms 100 --slo-shed --deadline-ms 500 \
+        --autoscale --slo-autoscale --flight-recorder flight.json
+
     # legacy single-batch path (token-by-token cache priming; kept as the
     # benchmark baseline and for the audio/vision frontends):
     PYTHONPATH=src python -m repro.launch.serve --mode naive --batch 4
@@ -53,6 +61,7 @@ engine replaces it for sustained traffic — see repro.serving.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -66,18 +75,21 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.serving.autoscaler import Autoscaler, AutoscalePolicy
 from repro.serving.engine import (Request, ServingEngine, bursty_requests,
+                                  diurnal_requests,
                                   long_document_requests,
                                   multi_tenant_requests,
                                   repetitive_requests,
                                   shared_prefix_requests, summarize,
                                   synthetic_requests)
-from repro.serving.observability import (NULL_OBS, Observability,
-                                         export_metrics, export_trace,
+from repro.serving.observability import (NULL_OBS, FlightRecorder,
+                                         Observability, export_metrics,
+                                         export_trace,
                                          validate_metrics_dump,
                                          validate_trace_events)
 from repro.serving.replica import Replica
 from repro.serving.router import Router, summarize_cluster
 from repro.serving.sampling import SamplingParams
+from repro.serving.slo import SLOPolicy, SLOSignal, SLOTracker
 
 
 # module-level so repeated generate() calls with the same shapes reuse the
@@ -142,6 +154,12 @@ def _make_workload(args, cfg):
     rate = float("inf") if args.rate <= 0 else args.rate
     plen = _prompt_len_spec(args.prompt_len)
     sampling = _sampling_from_args(args)
+    if args.deadline_ms is not None:
+        # stamp a per-request soft TTFT deadline: decoding is unchanged;
+        # under --slo-shed the scheduler sheds requests that cannot make
+        # it and admits tighter deadlines first within a priority class
+        base = sampling if sampling is not None else SamplingParams()
+        sampling = dataclasses.replace(base, deadline_ms=args.deadline_ms)
     if args.workload == "shared-prefix":
         return shared_prefix_requests(
             args.requests, vocab_size=cfg.vocab_size,
@@ -161,6 +179,14 @@ def _make_workload(args, cfg):
             base_rate=args.base_rate, burst_rate=args.burst_rate,
             burst_every=args.burst_every, burst_len=args.burst_len,
             prompt_len=plen, max_new=tuple(args.max_new),
+            priorities=tuple(args.priorities), sampling=sampling,
+            seed=args.seed)
+    if args.workload == "diurnal":
+        return diurnal_requests(
+            args.requests, vocab_size=cfg.vocab_size,
+            rate_min=args.rate_min, rate_max=args.rate_max,
+            period=args.diurnal_period, prompt_len=plen,
+            max_new=tuple(args.max_new),
             priorities=tuple(args.priorities), sampling=sampling,
             seed=args.seed)
     if args.workload == "repetitive":
@@ -194,15 +220,41 @@ def _engine_kwargs(args, max_seq_len):
                 max_logprobs=max(args.logprobs, 8))
 
 
+def _slo_from_args(args):
+    """(SLOPolicy, SLOTracker) when any SLO flag asks for the layer,
+    else (None, None) — the default path carries zero SLO state."""
+    slo_on = (args.slo_ttft_ms is not None
+              or args.slo_latency_ms is not None
+              or args.slo_shed or args.slo_autoscale)
+    if not slo_on:
+        return None, None
+    policy = SLOPolicy(
+        ttft_objective_ms=(args.slo_ttft_ms if args.slo_ttft_ms is not None
+                           else 200.0),
+        latency_objective_ms=args.slo_latency_ms,
+        error_budget=args.slo_budget)
+    return policy, SLOTracker(policy)
+
+
 def _run_engine(args, cfg, params):
     reqs = _make_workload(args, cfg)
     max_prompt = max(len(r.prompt) for r in reqs)
     kwargs = _engine_kwargs(args, max_prompt + max(args.max_new) + 1)
+    slo_policy, slo_tracker = _slo_from_args(args)
     # the recorder is on only when an export was asked for — the default
     # NULL_OBS path records nothing and adds no work (and outputs are
-    # bit-identical either way)
-    tracing = bool(args.trace_out or args.metrics_out)
-    obs = Observability() if tracing else NULL_OBS
+    # bit-identical either way). --flight-recorder implies the recorder:
+    # the ring is fed by the same instruments.
+    recorder = (FlightRecorder(dump_path=args.flight_recorder)
+                if args.flight_recorder else None)
+    tracing = bool(args.trace_out or args.metrics_out
+                   or args.flight_recorder)
+    obs = Observability(recorder=recorder) if tracing else NULL_OBS
+    if slo_tracker is not None:
+        kwargs["slo_tracker"] = slo_tracker
+        kwargs["slo_shed"] = args.slo_shed
+        if obs.enabled:
+            obs.slo = slo_tracker    # root view: metrics_dump sketches
     if args.autoscale:
         # elastic cluster: the router starts with min_replicas enabled
         # stacks; the rest are built up front and parked in the
@@ -218,8 +270,11 @@ def _run_engine(args, cfg, params):
             min_replicas=args.min_replicas, max_replicas=n_max,
             queue_high=args.queue_high, queue_low=args.queue_low,
             cooldown_s=args.scale_cooldown)
+        controller = (SLOSignal(slo_tracker, policy, obs=obs)
+                      if args.slo_autoscale else None)
         Autoscaler(router, policy=policy,
-                   standby=replicas[args.min_replicas:], obs=obs)
+                   standby=replicas[args.min_replicas:], obs=obs,
+                   controller=controller)
         done = router.run(reqs)
         stats = summarize_cluster(done, router.wall_time, router)
     elif args.replicas > 1:
@@ -232,6 +287,19 @@ def _run_engine(args, cfg, params):
         engine = ServingEngine(params, cfg, obs=obs, **kwargs)
         done = engine.run(reqs)
         stats = summarize(done, engine.wall_time, engine)
+    if slo_tracker is not None and "slo" not in stats:
+        # cluster paths: summarize_cluster has no engine handle, so the
+        # shared tracker's snapshot is attached here
+        stats["slo"] = slo_tracker.snapshot()
+    if args.flight_recorder:
+        doc = recorder.dump()
+        errs = validate_trace_events(doc)
+        if errs:
+            raise SystemExit(f"invalid flight-recorder dump: {errs[:3]}")
+        fr = doc["otherData"]["flight_recorder"]
+        print(f"flight recorder: {fr['events']} events "
+              f"({fr['dropped']} dropped, {len(fr['anomalies'])} "
+              f"anomalies) to {args.flight_recorder}")
     if args.trace_out:
         doc = export_trace(obs, args.trace_out)
         errs = validate_trace_events(doc)
@@ -288,7 +356,8 @@ def main():
                     metavar=("LO", "HI"))
     ap.add_argument("--workload", default="synthetic",
                     choices=["synthetic", "shared-prefix", "multi-tenant",
-                             "repetitive", "long-document", "bursty"])
+                             "repetitive", "long-document", "bursty",
+                             "diurnal"])
     ap.add_argument("--prefix-len", type=int, default=48,
                     help="shared system-prompt length (shared-prefix / "
                          "multi-tenant)")
@@ -311,7 +380,13 @@ def main():
                     help="burst duration per cycle in seconds (bursty)")
     ap.add_argument("--priorities", type=int, nargs="+", default=[0],
                     help="priority classes drawn uniformly per request "
-                         "(bursty)")
+                         "(bursty / diurnal)")
+    ap.add_argument("--rate-min", type=float, default=1.0,
+                    help="trough arrival rate req/s (diurnal)")
+    ap.add_argument("--rate-max", type=float, default=32.0,
+                    help="peak arrival rate req/s (diurnal)")
+    ap.add_argument("--diurnal-period", type=float, default=8.0,
+                    help="seconds per sinusoidal rate cycle (diurnal)")
     ap.add_argument("--priority-aging", type=float, default=2.0,
                     help="seconds of queue wait worth one priority class "
                          "at admission (starvation bound; <=0 disables)")
@@ -394,6 +469,36 @@ def main():
     ap.add_argument("--logprobs", type=int, default=0,
                     help="record the chosen token's logprob plus the "
                          "top-k alternatives per position (0 = off)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT objective in ms: turns on the SLO layer "
+                         "(streaming latency sketches + burn-rate "
+                         "windows; see repro.serving.slo)")
+    ap.add_argument("--slo-latency-ms", type=float, default=None,
+                    help="end-to-end latency objective in ms (optional "
+                         "second SLO besides TTFT)")
+    ap.add_argument("--slo-budget", type=float, default=0.1,
+                    help="error budget: tolerated fraction of requests "
+                         "over objective (burn rate 1.0 = spending "
+                         "exactly this budget)")
+    ap.add_argument("--slo-shed", action="store_true",
+                    help="SLO-aware admission: order by deadline slack "
+                         "within a priority class and shed requests "
+                         "whose --deadline-ms cannot be met (OFF by "
+                         "default — without it admission order and "
+                         "outputs are untouched)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request soft TTFT deadline in ms after "
+                         "arrival (stamped on every request; acted on "
+                         "only under --slo-shed)")
+    ap.add_argument("--slo-autoscale", action="store_true",
+                    help="drive --autoscale decisions from the TTFT "
+                         "burn rate (SLOSignal) instead of queue depth")
+    ap.add_argument("--flight-recorder", default=None, metavar="PATH",
+                    help="always-on bounded ring of recent trace events; "
+                         "dumps a Perfetto trace to PATH on anomalies "
+                         "(TTFT breach, preemption storm, eviction "
+                         "thrash) and at end of run. Enables the "
+                         "observability recorder.")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace_event JSON of "
                          "the run (request lifecycle spans per slot, "
@@ -405,6 +510,8 @@ def main():
                          "Enables the observability recorder.")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.slo_autoscale and not args.autoscale:
+        raise SystemExit("--slo-autoscale requires --autoscale")
 
     cfg = get_config(args.arch).reduced()
     mesh = make_host_mesh()

@@ -101,6 +101,8 @@ class AutoscaleController:
     testable over synthetic stats series, replayable over a recorded
     metrics dump."""
 
+    kind = "queue-depth"
+
     def __init__(self, policy: AutoscalePolicy):
         self.policy = policy
         self.reset()
@@ -156,6 +158,11 @@ class Autoscaler:
     spawn     optional factory `replica_id -> Replica` used when the
               standby pool is empty (a cold spawn pays jit compiles on
               its first dispatches — fine for capacity, bad for p99)
+    controller  alternative decision core implementing the same
+              `observe(t, queue_depth, active_slots, n_replicas)` /
+              `reset()` contract — e.g. `slo.SLOSignal`, which scales
+              on TTFT burn rate instead of the queue-depth bands.
+              Default: `AutoscaleController(policy)`.
 
     Construction attaches to the router: `Router._drive` ticks the
     autoscaler once per sweep and calls `begin_run` at run start.
@@ -164,10 +171,12 @@ class Autoscaler:
     def __init__(self, router, *, policy: Optional[AutoscalePolicy] = None,
                  standby: Sequence[Replica] = (),
                  spawn: Optional[Callable[[int], Replica]] = None,
+                 controller=None,
                  obs: Observability = NULL_OBS):
         self.router = router
         self.policy = policy or AutoscalePolicy()
-        self.controller = AutoscaleController(self.policy)
+        self.controller = (controller if controller is not None
+                           else AutoscaleController(self.policy))
         self._standby: List[Replica] = list(standby)
         self._spawn = spawn
         ids = [r.replica_id for r in router.replicas]
@@ -315,6 +324,7 @@ class Autoscaler:
         """The record a bench embeds: policy, event counts, event log."""
         return {
             "policy": dataclasses.asdict(self.policy),
+            "signal": getattr(self.controller, "kind", "queue-depth"),
             "enabled_replicas": len(self._enabled()),
             "standby_replicas": len(self._standby),
             "draining_replicas": len(self._draining),

@@ -53,6 +53,7 @@ length-masked (see models/lm.py) so recurrent final states stay exact.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
@@ -67,6 +68,7 @@ from repro.serving.runner import ModelRunner
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (Completion, Request, Scheduler,
                                      SchedulerStats, StreamEvent)
+from repro.serving.slo import SLOPolicy, SLOTracker
 
 
 class ServingEngine:
@@ -112,6 +114,19 @@ class ServingEngine:
                        at admission (starvation bound for low-priority
                        requests under priority scheduling; <= 0
                        disables aging — strict class order)
+    slo_policy         declared SLO objectives (slo.SLOPolicy): builds
+                       an SLOTracker fed TTFT / e2e latency / TPOT
+                       observations (quantile sketches + burn rates)
+    slo_tracker        pre-built SLOTracker to feed instead (how a
+                       cluster shares ONE tracker across replicas —
+                       burn rate is then cluster-wide); wins over
+                       slo_policy
+    slo_shed           enable deadline-aware admission: requests whose
+                       `SamplingParams.deadline_ms` cannot be met are
+                       shed (finish_reason "shed") and admission
+                       orders by deadline slack within a class. OFF by
+                       default — with it off, outputs are untouched by
+                       the SLO layer (measurement only)
 
     temperature / seed are DEPRECATED engine-wide knobs, kept as a
     back-compat shim: they map to a default SamplingParams (with a
@@ -132,6 +147,9 @@ class ServingEngine:
                  max_logprobs: int = 8, kv_dtype: str = "fp16",
                  host_cache_blocks: int = 0,
                  priority_aging: float = 2.0,
+                 slo_policy: Optional[SLOPolicy] = None,
+                 slo_tracker: Optional[SLOTracker] = None,
+                 slo_shed: bool = False,
                  obs: Observability = NULL_OBS):
         if cfg.frontend != "none":
             raise NotImplementedError(
@@ -167,6 +185,15 @@ class ServingEngine:
         self.kv_dtype = kv_dtype
         self.host_cache_blocks = max(0, int(host_cache_blocks))
         self.obs = obs or NULL_OBS
+        if slo_tracker is not None:
+            self.slo = slo_tracker
+        elif slo_policy is not None:
+            self.slo = SLOTracker(slo_policy)
+        else:
+            self.slo = None
+        self.slo_shed = bool(slo_shed)
+        self._g_burn_fast = self.obs.gauge("slo_burn_rate_fast_gauge")
+        self._g_burn_slow = self.obs.gauge("slo_burn_rate_slow_gauge")
         self._t0 = time.perf_counter()  # engine clock origin (reset by run)
         # runner first: the allocator's host spill tier moves payloads
         # through the runner's fetch/upload callbacks
@@ -191,7 +218,8 @@ class ServingEngine:
             max_seq_len=max_seq_len, prefix_cache=self.prefix_cache,
             now_fn=self._now, speculate=self.speculate, draft=draft,
             ngram=ngram, default_sampling=self.default_sampling,
-            priority_aging_s=priority_aging, obs=self.obs)
+            priority_aging_s=priority_aging, slo_tracker=self.slo,
+            slo_shed=self.slo_shed, obs=self.obs)
         self.cache_bytes = self.runner.cache_bytes
         self.steps = 0                # decode+verify iterations executed
         self.busy_lane_steps = 0      # sum of active lanes over iterations
@@ -232,6 +260,10 @@ class ServingEngine:
         self.allocator.host_demotions = 0
         self.allocator.host_revivals = 0
         self.obs.begin_run()
+        if self.slo is not None:
+            self.slo.reset()          # shared trackers reset idempotently
+            if self.obs.enabled:
+                self.obs.slo = self.slo   # metrics_dump emits v2 sections
         if self.obs.enabled:
             # static pool-capacity gauges (instruments reset per run)
             self.obs.gauge("kv_device_bytes_gauge").set(self.cache_bytes)
@@ -264,6 +296,15 @@ class ServingEngine:
             # occupancy time series (sampled post-admission so queue
             # depth and slot occupancy reflect this step's batch)
             self.obs.sample_stats(self._now(), self.scheduler.stats())
+        if self.slo is not None:
+            # burn-rate tick on the run clock (records the run peaks
+            # the bench gates on; gauges are no-ops with obs off)
+            fast, slow = self.slo.tick(self._now())
+            self._g_burn_fast.set(fast or 0.0)
+            self._g_burn_slow.set(slow or 0.0)
+        fr = self.obs.recorder
+        if fr is not None:            # eviction-thrash detection
+            fr.note_evictions(self._now(), self.allocator.cache_evictions)
         if self.speculate:
             vb = self.scheduler.prepare_verify()
             if vb is not None:
@@ -536,6 +577,79 @@ def bursty_requests(n: int, *, vocab_size: int, base_rate: float = 4.0,
         sampling=_per_request(sampling, i)) for i in range(n)]
 
 
+def diurnal_requests(n: int, *, vocab_size: int, rate_min: float = 1.0,
+                     rate_max: float = 32.0, period: float = 8.0,
+                     segments: int = 32,
+                     prompt_len: Union[int, Tuple[int, int]] = (8, 24),
+                     max_new: tuple = (8, 32),
+                     priorities: Sequence[int] = (0,),
+                     priority_weights: Optional[Sequence[float]] = None,
+                     sampling: Optional[SamplingParams] = None,
+                     seed: int = 0) -> List[Request]:
+    """Diurnal workload: a seeded piecewise-sinusoidal rate profile —
+    the smooth day/night traffic shape, compressed to a `period` an SLO
+    autoscaler can ride within one run. The rate sweeps
+
+        rate(t) = rate_min + (rate_max - rate_min)
+                  * (1 - cos(2*pi*t / period)) / 2
+
+    starting at the TROUGH (rate_min at t=0, peak at period/2), so a
+    run opens calm, climbs into saturation, and relaxes again —
+    exercising scale-out on the rising edge and scale-in on the falling
+    one, without bursty_requests' step discontinuities.
+
+    The sinusoid is discretized into `segments` piecewise-constant
+    steps per period (rate = the segment-midpoint value) and arrivals
+    are drawn by the same exact inversion of the inhomogeneous Poisson
+    integral bursty_requests uses — seeded and reproducible. Priority
+    classes mix exactly as there."""
+    if rate_min <= 0 or rate_max < rate_min:
+        raise ValueError("need 0 < rate_min <= rate_max")
+    if period <= 0 or segments < 2:
+        raise ValueError("need period > 0 and segments >= 2")
+    rng = np.random.default_rng(seed)
+    seg = period / segments
+    rates = [rate_min + (rate_max - rate_min)
+             * (1.0 - math.cos(2.0 * math.pi * (k + 0.5) / segments))
+             / 2.0 for k in range(segments)]
+
+    def _advance(t: float, e: float) -> float:
+        # spend exponential mass `e` walking forward through the
+        # piecewise-constant discretization (segment-index walk, so
+        # float edges can't strand t at a boundary)
+        k = int(t // seg)
+        while True:
+            r = rates[k % segments]
+            dt = (k + 1) * seg - t
+            if dt > 0 and e <= r * dt:
+                return t + e / r
+            e -= r * max(dt, 0.0)
+            t = (k + 1) * seg
+            k += 1
+
+    arrivals = []
+    t = 0.0
+    for _ in range(n):
+        t = _advance(t, rng.exponential(1.0))
+        arrivals.append(t)
+    if priority_weights is not None:
+        w = np.asarray(priority_weights, dtype=float)
+        if len(w) != len(priorities):
+            raise ValueError("need one priority_weights entry per class")
+        pidx = rng.choice(len(priorities), size=n, p=w / w.sum())
+    else:
+        pidx = rng.integers(0, len(priorities), n)
+    plens = _sample_lengths(rng, prompt_len, n)
+    lo, hi = max_new
+    return [Request(
+        rid=i,
+        prompt=rng.integers(0, vocab_size, int(plens[i])).astype(np.int32),
+        max_new_tokens=int(rng.integers(lo, hi + 1)),
+        arrival=float(arrivals[i]),
+        priority=int(priorities[int(pidx[i])]),
+        sampling=_per_request(sampling, i)) for i in range(n)]
+
+
 def long_document_requests(n: int, *, vocab_size: int,
                            prompt_len: Union[int, Tuple[int, int]] = 4096,
                            max_new: tuple = (4, 16),
@@ -600,10 +714,21 @@ def summarize(completions: Sequence[Completion], wall: float,
               engine: Optional[ServingEngine] = None) -> Dict:
     """Throughput / latency telemetry over a finished run. Well-defined
     for degenerate inputs: empty completion lists, a single completion
-    (percentiles collapse to that value), and zero wall clock."""
+    (percentiles collapse to that value), and zero wall clock. Shed
+    requests (finish_reason == "shed") produced no tokens and carry a
+    synthetic t_first_token, so they are excluded from the latency
+    percentiles and counted separately."""
+    shed = [c for c in completions if c.finish_reason == "shed"]
+    if shed:
+        # only rebind when sheds happened: records from shed-free runs
+        # stay byte-identical to pre-SLO ones
+        completions = [c for c in completions
+                       if c.finish_reason != "shed"]
     if not completions:
         stats = {"requests": 0, "generated_tokens": 0,
                  "wall_s": round(wall, 4), "tokens_per_s": 0.0}
+        if shed:
+            stats["shed_requests"] = len(shed)
         if engine is not None:
             stats["kv_cache_mb"] = round(engine.cache_bytes / 2**20, 2)
         return stats
@@ -705,4 +830,10 @@ def summarize(completions: Sequence[Completion], wall: float,
                     max(gen - len(completions), 0) / max(dispatches, 1),
                     3),
             }
+        if getattr(engine, "slo", None) is not None:
+            stats["slo"] = engine.slo.snapshot()
+            stats["slo"]["shed_requests"] = sched.shed_requests
+            stats["slo"]["deferrals"] = sched.deferrals
+    if shed:
+        stats["shed_requests"] = len(shed)
     return stats

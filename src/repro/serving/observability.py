@@ -9,7 +9,7 @@ navigable with measurements; this module records the signals the
 control loops above the engine (SLO autoscaling, adaptive speculation
 length) will steer by.
 
-Three pieces:
+Four pieces:
 
   * `MetricsRegistry` — labeled counters, gauges, and fixed-bucket
     histograms (e.g. `scheduler_admitted_total{replica=0}`,
@@ -34,6 +34,14 @@ Three pieces:
     `metrics_dump()` renders the registry as a schema-versioned JSON
     document, and `validate_trace_events` / `validate_metrics_dump`
     check both formats (the CI gate).
+  * `FlightRecorder` — an always-on bounded ring buffer of the most
+    recent trace events (steady-state cost: one deque append per
+    event, no export, no device sync) that dumps a schema-valid
+    Perfetto trace when an anomaly fires — a TTFT-objective breach, a
+    preemption storm, or eviction thrash — or on demand. The black box
+    for tail-latency forensics: when something goes wrong you get the
+    last `capacity` events leading up to it without having paid for
+    full tracing all along.
 
 The default recorder is `NULL_OBS`: every method is a no-op and
 `enabled` is False, so layers guard their bookkeeping behind one
@@ -46,13 +54,20 @@ from __future__ import annotations
 
 import copy
 import json
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 # trace_event thread id of the per-replica dispatch track (slot tracks
 # use tid == slot index; any real slot count stays far below this)
 DISPATCH_TID = 1000
+# thread id of the flight-recorder anomaly track
+FLIGHT_TID = 95
 
-METRICS_SCHEMA = "repro.serving.metrics/v1"
+# current metrics-dump schema (v2 added the optional `sketches` and
+# `slo` sections for the SLO layer's quantile sketches / burn-rate
+# accounting); v1 documents remain valid
+METRICS_SCHEMA = "repro.serving.metrics/v2"
+METRICS_SCHEMAS = ("repro.serving.metrics/v1", METRICS_SCHEMA)
 TRACE_SCHEMA = "repro.serving.trace_event/v1"
 
 
@@ -230,6 +245,146 @@ class MetricsRegistry:
 
 
 # ----------------------------------------------------------------------------
+# the flight recorder
+# ----------------------------------------------------------------------------
+
+class FlightRecorder:
+    """Always-on bounded ring of recent trace events with anomaly-
+    triggered dumps — the serving stack's black box.
+
+    Attach one via `Observability(recorder=...)`: every span / instant
+    / async event the recorder handle sees is ALSO appended to the ring
+    (same dict objects, so later `annotate_step` mutations are visible
+    in the dump), and the ring's `deque(maxlen=capacity)` keeps memory
+    bounded no matter how long the run is. Steady-state cost is one
+    append per event — no export, no serialization, no device sync.
+
+    Anomaly triggers, each recording an entry in `anomalies`, an
+    instant on the FLIGHT_TID track, and (when `dump_path` is set and
+    the rate limit allows) a schema-valid Perfetto dump of the ring:
+
+      * `breach()` — called by the scheduler when a request's TTFT (or
+        e2e latency) lands past its SLO objective
+      * preemption storm — `note_preempt()` saw `preempt_storm`
+        preemptions inside `window_s`
+      * eviction thrash — `note_evictions()` saw `evict_thrash`
+        cache evictions inside `window_s`
+
+    Detector state rides the run clock (deterministic, no wall time);
+    `min_dump_interval_s` keeps a sustained incident from rewriting the
+    dump file every event.
+    """
+
+    def __init__(self, capacity: int = 4096, *,
+                 dump_path: Optional[str] = None,
+                 preempt_storm: int = 8, evict_thrash: int = 64,
+                 window_s: float = 1.0,
+                 min_dump_interval_s: float = 0.5):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.dump_path = dump_path
+        self.preempt_storm = int(preempt_storm)
+        self.evict_thrash = int(evict_thrash)
+        self.window_s = float(window_s)
+        self.min_dump_interval_s = float(min_dump_interval_s)
+        self.ring: deque = deque(maxlen=self.capacity)
+        self.anomalies: deque = deque(maxlen=256)
+        self.appended = 0       # over all time; dropped = appended - len(ring)
+        self.dumps = 0
+        self._preempts: deque = deque()         # preemption timestamps
+        self._evict_events: deque = deque()     # (t, delta) eviction rows
+        self._evict_last = 0
+        self._last_dump = float("-inf")
+
+    # -- the hot path ----------------------------------------------------
+
+    def append(self, kind: str, rec: Dict[str, Any]) -> None:
+        """Ring append (kind is "span" / "instant" / "async"); the ONLY
+        per-event cost of an attached recorder."""
+        self.ring.append((kind, rec))
+        self.appended += 1
+
+    # -- anomaly triggers ------------------------------------------------
+
+    def breach(self, t: float, reason: str, **args) -> None:
+        """Record an anomaly (and dump the ring, rate-limited)."""
+        self.anomalies.append({"t": t, "reason": reason, "args": args})
+        self.append("instant", {"pid": 0, "tid": FLIGHT_TID,
+                                "name": f"anomaly:{reason}",
+                                "cat": "flight", "t": t, "args": args})
+        if self.dump_path is not None \
+                and t - self._last_dump >= self.min_dump_interval_s:
+            self._last_dump = t
+            self.dump(self.dump_path)
+
+    def note_preempt(self, t: float) -> None:
+        """Feed from the scheduler's preempt path: `preempt_storm`
+        preemptions inside `window_s` is an anomaly."""
+        self._preempts.append(t)
+        while self._preempts and self._preempts[0] < t - self.window_s:
+            self._preempts.popleft()
+        if len(self._preempts) >= self.preempt_storm:
+            n = len(self._preempts)
+            self._preempts.clear()      # re-arm, don't re-fire per event
+            self.breach(t, "preempt_storm", preemptions=n,
+                        window_s=self.window_s)
+
+    def note_evictions(self, t: float, total: int) -> None:
+        """Feed from the engine step loop with the allocator's
+        cumulative eviction counter; `evict_thrash` evictions inside
+        `window_s` is an anomaly."""
+        delta = total - self._evict_last
+        self._evict_last = total
+        if delta > 0:
+            self._evict_events.append((t, delta))
+        while self._evict_events \
+                and self._evict_events[0][0] < t - self.window_s:
+            self._evict_events.popleft()
+        recent = sum(d for _, d in self._evict_events)
+        if recent >= self.evict_thrash:
+            self._evict_events.clear()  # re-arm
+            self.breach(t, "eviction_thrash", evictions=recent,
+                        window_s=self.window_s)
+
+    # -- export ----------------------------------------------------------
+
+    def to_perfetto(self) -> Dict[str, Any]:
+        """The ring as a schema-valid Perfetto trace_event document
+        (same renderer as the full-trace exporter), with a
+        `flight_recorder` summary in otherData."""
+        spans = [r for k, r in self.ring if k == "span"]
+        instants = [r for k, r in self.ring if k == "instant"]
+        asyncs = [r for k, r in self.ring if k == "async"]
+        return _render_trace(spans, instants, asyncs, other={
+            "flight_recorder": {
+                "capacity": self.capacity,
+                "events": len(self.ring),
+                "dropped": self.appended - len(self.ring),
+                "anomalies": list(self.anomalies),
+            }})
+
+    def dump(self, path: Optional[str] = None) -> Dict[str, Any]:
+        doc = self.to_perfetto()
+        path = path if path is not None else self.dump_path
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        self.dumps += 1
+        return doc
+
+    def reset(self) -> None:
+        self.ring.clear()
+        self.anomalies.clear()
+        self.appended = 0
+        self.dumps = 0
+        self._preempts.clear()
+        self._evict_events.clear()
+        self._evict_last = 0
+        self._last_dump = float("-inf")
+
+
+# ----------------------------------------------------------------------------
 # the recorder handle
 # ----------------------------------------------------------------------------
 
@@ -241,14 +396,20 @@ class Observability:
 
     sample_interval   minimum seconds between SchedulerStats time-series
                       samples (0 = record every engine step).
+    recorder          optional `FlightRecorder`: every span / instant /
+                      async event is also ring-appended (shared dict
+                      objects — cheap, bounded, dump-on-anomaly).
     """
 
     enabled = True
 
-    def __init__(self, *, sample_interval: float = 0.05):
+    def __init__(self, *, sample_interval: float = 0.05,
+                 recorder: Optional[FlightRecorder] = None):
         self.registry = MetricsRegistry()
         self.sample_interval = float(sample_interval)
         self.replica = 0
+        self.recorder = recorder
+        self.slo = None         # optional SLOTracker (set by engine/serve)
         # trace storage (shared across scoped views)
         self.spans: List[Dict[str, Any]] = []     # complete spans
         self.instants: List[Dict[str, Any]] = []  # point events
@@ -291,20 +452,27 @@ class Observability:
         rec = {"pid": self.replica, "tid": tid, "name": name, "cat": cat,
                "t0": t0, "t1": t1, "args": args}
         self.spans.append(rec)
+        if self.recorder is not None:
+            self.recorder.append("span", rec)
         return rec
 
     def instant(self, tid: int, name: str, cat: str, t: float,
                 **args) -> None:
-        self.instants.append({"pid": self.replica, "tid": tid,
-                              "name": name, "cat": cat, "t": t,
-                              "args": args})
+        rec = {"pid": self.replica, "tid": tid, "name": name, "cat": cat,
+               "t": t, "args": args}
+        self.instants.append(rec)
+        if self.recorder is not None:
+            self.recorder.append("instant", rec)
 
     def async_span(self, name: str, cat: str, aid: int, t0: float,
                    t1: float, **args) -> None:
         """A span that may overlap others (queue residency): rendered as
         Perfetto async b/e pairs keyed by `aid`."""
-        self.asyncs.append({"pid": self.replica, "name": name, "cat": cat,
-                            "id": aid, "t0": t0, "t1": t1, "args": args})
+        rec = {"pid": self.replica, "name": name, "cat": cat,
+               "id": aid, "t0": t0, "t1": t1, "args": args}
+        self.asyncs.append(rec)
+        if self.recorder is not None:
+            self.recorder.append("async", rec)
 
     # -- dispatch step records -------------------------------------------
 
@@ -367,6 +535,8 @@ class Observability:
         self.asyncs.clear()
         self._last_sample[0] = None
         self._last_step[0] = None
+        if self.recorder is not None:
+            self.recorder.reset()
 
 
 class _NullObservability(Observability):
@@ -375,6 +545,8 @@ class _NullObservability(Observability):
     costs one dynamic dispatch and records nothing."""
 
     enabled = False
+    recorder = None
+    slo = None
 
     def __init__(self):  # no storage at all
         pass
@@ -424,49 +596,75 @@ def _us(t: float) -> float:
     return round(t * 1e6, 3)
 
 
-def to_perfetto(obs: Observability) -> Dict[str, Any]:
-    """Render the recorded trace as a Chrome/Perfetto `trace_event`
-    document: one process per replica (pid), one thread per slot track
-    plus the dispatch track (tid), complete ("X") spans for slot
-    residency / lifecycle phases / dispatches, async ("b"/"e") spans
-    for queue residency, and metadata naming every track. Timestamps
-    are microseconds on the shared run clock."""
+def _track_name(tid: int) -> str:
+    if tid == DISPATCH_TID:
+        return "dispatch"
+    if tid == FLIGHT_TID:
+        return "flight-recorder"
+    return f"slot {tid}"
+
+
+def _render_trace(spans: Sequence[Dict[str, Any]],
+                  instants: Sequence[Dict[str, Any]],
+                  asyncs: Sequence[Dict[str, Any]],
+                  other: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Render span/instant/async records as a Chrome/Perfetto
+    `trace_event` document: one process per replica (pid), one thread
+    per slot track plus the dispatch track (tid), complete ("X") spans
+    for slot residency / lifecycle phases / dispatches, async ("b"/"e")
+    spans for queue residency, and metadata naming every track.
+    Timestamps are microseconds on the shared run clock. Shared by the
+    full-trace exporter and the flight recorder's ring dumps."""
     events: List[Dict[str, Any]] = []
     tracks = set()
-    for s in obs.spans:
+    for s in spans:
         tracks.add((s["pid"], s["tid"]))
         events.append({"name": s["name"], "cat": s["cat"], "ph": "X",
                        "ts": _us(s["t0"]),
                        "dur": max(_us(s["t1"]) - _us(s["t0"]), 0.0),
                        "pid": s["pid"], "tid": s["tid"],
                        "args": s["args"]})
-    for i in obs.instants:
+    for i in instants:
         tracks.add((i["pid"], i["tid"]))
         events.append({"name": i["name"], "cat": i["cat"], "ph": "i",
                        "ts": _us(i["t"]), "s": "t", "pid": i["pid"],
                        "tid": i["tid"], "args": i["args"]})
-    for a in obs.asyncs:
+    for a in asyncs:
         base = {"name": a["name"], "cat": a["cat"],
                 "id": str(a["id"]), "pid": a["pid"], "tid": 0}
         events.append({**base, "ph": "b", "ts": _us(a["t0"]),
                        "args": a["args"]})
         events.append({**base, "ph": "e", "ts": _us(a["t1"])})
     for pid in sorted({p for p, _ in tracks} | {a["pid"]
-                                                for a in obs.asyncs}):
+                                                for a in asyncs}):
         events.append({"name": "process_name", "ph": "M", "pid": pid,
                        "tid": 0, "args": {"name": f"replica {pid}"}})
     for pid, tid in sorted(tracks):
-        name = "dispatch" if tid == DISPATCH_TID else f"slot {tid}"
         events.append({"name": "thread_name", "ph": "M", "pid": pid,
-                       "tid": tid, "args": {"name": name}})
+                       "tid": tid, "args": {"name": _track_name(tid)}})
+    other_data = {"schema": TRACE_SCHEMA}
+    if other:
+        other_data.update(other)
     return {"traceEvents": events, "displayTimeUnit": "ms",
-            "otherData": {"schema": TRACE_SCHEMA}}
+            "otherData": other_data}
+
+
+def to_perfetto(obs: Observability) -> Dict[str, Any]:
+    """The full recorded trace as a Perfetto document (see
+    `_render_trace` for the layout)."""
+    return _render_trace(obs.spans, obs.instants, obs.asyncs)
 
 
 def metrics_dump(obs: Observability) -> Dict[str, Any]:
-    """The registry (plus time series) as a schema-versioned document."""
+    """The registry (plus time series) as a schema-versioned document;
+    with an SLOTracker attached (`obs.slo`), also the per-(metric,
+    class) quantile sketches and the SLO summary (v2 sections)."""
     doc = {"schema": METRICS_SCHEMA}
     doc.update(obs.registry.to_dict())
+    slo = getattr(obs, "slo", None)
+    if slo is not None:
+        doc["sketches"] = slo.sketch_rows()
+        doc["slo"] = slo.snapshot()
     return doc
 
 
@@ -540,17 +738,38 @@ def validate_trace_events(doc: Any) -> List[str]:
     for key, depth in open_async.items():
         if depth != 0:
             errs.append(f"async span id {key[1]} left open")
+    fr = (doc.get("otherData") or {}).get("flight_recorder") \
+        if isinstance(doc.get("otherData"), dict) else None
+    if fr is not None:
+        if not isinstance(fr, dict):
+            errs.append("otherData.flight_recorder must be an object")
+        else:
+            for key in ("capacity", "events", "dropped"):
+                if not isinstance(fr.get(key), int) or fr[key] < 0:
+                    errs.append(f"flight_recorder.{key} must be a "
+                                f"non-negative integer")
+            if not isinstance(fr.get("anomalies"), list):
+                errs.append("flight_recorder.anomalies must be a list")
+            else:
+                for n, a in enumerate(fr["anomalies"]):
+                    if not (isinstance(a, dict)
+                            and isinstance(a.get("t"), (int, float))
+                            and isinstance(a.get("reason"), str)):
+                        errs.append(f"flight_recorder.anomalies[{n}]: "
+                                    f"needs numeric t and string reason")
     return errs
 
 
 def validate_metrics_dump(doc: Any) -> List[str]:
     """Errors that would make `doc` an invalid metrics dump (empty list
-    = valid against METRICS_SCHEMA)."""
+    = valid). Accepts every schema generation in METRICS_SCHEMAS — v1
+    documents (no sketch/SLO sections) stay valid under the v2
+    validator; the v2-only sections are validated when present."""
     errs: List[str] = []
     if not isinstance(doc, dict):
         return ["document must be an object"]
-    if doc.get("schema") != METRICS_SCHEMA:
-        errs.append(f"schema must be {METRICS_SCHEMA!r}, "
+    if doc.get("schema") not in METRICS_SCHEMAS:
+        errs.append(f"schema must be one of {METRICS_SCHEMAS!r}, "
                     f"got {doc.get('schema')!r}")
     for section in ("counters", "gauges", "histograms", "series"):
         if not isinstance(doc.get(section), list):
@@ -578,4 +797,44 @@ def validate_metrics_dump(doc: Any) -> List[str]:
         if not (isinstance(row, dict)
                 and isinstance(row.get("t"), (int, float))):
             errs.append(f"series[{n}]: needs a numeric t")
+    # v2 optional sections
+    if "sketches" in doc:
+        if not isinstance(doc["sketches"], list):
+            errs.append("sketches must be a list")
+        else:
+            for n, row in enumerate(doc["sketches"]):
+                where = f"sketches[{n}]"
+                if not (isinstance(row, dict)
+                        and isinstance(row.get("name"), str)
+                        and isinstance(row.get("labels"), dict)):
+                    errs.append(f"{where}: needs name/labels")
+                    continue
+                if not (isinstance(row.get("rel_err"), (int, float))
+                        and 0 < row["rel_err"] < 1):
+                    errs.append(f"{where}: rel_err must be in (0, 1)")
+                if not (isinstance(row.get("count"), int)
+                        and row["count"] >= 0):
+                    errs.append(f"{where}: needs a non-negative count")
+                if not isinstance(row.get("sum"), (int, float)):
+                    errs.append(f"{where}: needs a numeric sum")
+                buckets = row.get("buckets")
+                if not isinstance(buckets, list):
+                    errs.append(f"{where}: buckets must be a list")
+                else:
+                    for b in buckets:
+                        if not (isinstance(b, list) and len(b) == 2
+                                and all(isinstance(x, int) and x >= 0
+                                        for x in b)):
+                            errs.append(f"{where}: buckets must be "
+                                        f"[index, count] integer pairs")
+                            break
+                    if isinstance(row.get("count"), int) \
+                            and sum(b[1] for b in buckets
+                                    if isinstance(b, list) and len(b) == 2
+                                    and isinstance(b[1], int)) \
+                            != row["count"]:
+                        errs.append(f"{where}: bucket counts must sum "
+                                    f"to count")
+    if "slo" in doc and not isinstance(doc["slo"], dict):
+        errs.append("slo must be an object")
     return errs

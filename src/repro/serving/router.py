@@ -502,6 +502,8 @@ def summarize_cluster(completions: Sequence[Completion], wall: float,
             "prefix_hit_requests": sched.prefix_hit_requests,
             "preemptions": sched.preemptions,
             "resumes": sched.resumes,
+            "shed": sched.shed_requests,
+            "deferrals": sched.deferrals,
             "warm_blocks": snap.cached_blocks,
             "indexed_blocks": snap.indexed_blocks,
         })
@@ -515,6 +517,8 @@ def summarize_cluster(completions: Sequence[Completion], wall: float,
                                     for p in per),
         "preemptions": sum(p["preemptions"] for p in per),
         "resumes": sum(p["resumes"] for p in per),
+        "shed_requests": sum(p["shed"] for p in per),
+        "deferrals": sum(p["deferrals"] for p in per),
         "per_replica": per,
     }
     if router.autoscaler is not None:

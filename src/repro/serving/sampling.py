@@ -89,6 +89,14 @@ class SamplingParams:
                     speculative verify path. True is accepted as 1
                     (back-compat). k is capped by the runner's
                     max_logprobs (the static top-k width it compiles).
+    deadline_ms     optional soft TTFT deadline, milliseconds after the
+                    request's arrival. Decoding behavior is UNCHANGED;
+                    the deadline only matters to a scheduler running
+                    with SLO shedding enabled (slo_shed=True), which
+                    may shed a queued request it estimates cannot reach
+                    its first token in time (finish_reason "shed") and
+                    orders admission by deadline slack. With shedding
+                    off (the default) it is purely informational.
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -97,6 +105,7 @@ class SamplingParams:
     max_new_tokens: int = 16
     stop: Tuple[Tuple[int, ...], ...] = ()
     logprobs: int = 0
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(self, "stop", _normalize_stop(self.stop))
@@ -113,6 +122,9 @@ class SamplingParams:
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the first "
                              "token is sampled from the prefill logits)")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, "
+                             f"got {self.deadline_ms}")
 
     @property
     def greedy(self) -> bool:

@@ -89,6 +89,7 @@ from repro.serving.draft import make_proposer
 from repro.serving.observability import NULL_OBS, Observability
 from repro.serving.runner import ModelRunner, PrefillRow
 from repro.serving.sampling import SamplingParams, resolve
+from repro.serving.slo import SLO_TID, SLOTracker
 
 
 @dataclasses.dataclass
@@ -123,7 +124,8 @@ class Completion:
     t_first_token: float
     t_done: float
     cached_tokens: int = 0        # prompt tokens served from the prefix cache
-    finish_reason: str = "length"  # 'length' | 'stop'
+    finish_reason: str = "length"  # 'length' | 'stop' | 'shed' (an SLO
+    #                               shed: never admitted, tokens empty)
     logprobs: Optional[np.ndarray] = None   # (n_generated,) float32 if
     #                               SamplingParams.logprobs was requested
     top_ids: Optional[np.ndarray] = None       # (n_generated, k) int32 and
@@ -252,16 +254,30 @@ class Scheduler:
                  draft: str = "ngram", ngram: int = 3,
                  default_sampling: Optional[SamplingParams] = None,
                  priority_aging_s: float = 2.0,
+                 slo_tracker: Optional[SLOTracker] = None,
+                 slo_shed: bool = False,
                  obs: Observability = NULL_OBS):
         self.allocator = allocator
         self.runner = runner
         self._obs = obs or NULL_OBS
+        # SLO layer (optional): the tracker receives TTFT / e2e latency
+        # / TPOT observations and prices queued requests' expected wait;
+        # slo_shed additionally enables deadline-aware admission (EDF
+        # slack ordering + shed-on-hopeless). Shedding is OPT-IN: with
+        # it off, deadlines are informational and admission order is
+        # untouched, so every bit-identity gate is unaffected.
+        self.slo = slo_tracker
+        self.slo_shed = bool(slo_shed)
         # instruments resolved once (no-ops when obs is off)
         self._c_submitted = self._obs.counter("scheduler_submitted_total")
         self._c_admitted = self._obs.counter("scheduler_admitted_total")
         self._c_finished = {
             r: self._obs.counter("scheduler_finished_total", reason=r)
-            for r in ("length", "stop")}
+            for r in ("length", "stop", "shed")}
+        self._c_shed = self._obs.counter("slo_shed_total")
+        self._c_deferred = self._obs.counter("slo_deferred_total")
+        self._c_ttft_breach = self._obs.counter("slo_ttft_breach_total")
+        self._c_lat_breach = self._obs.counter("slo_latency_breach_total")
         self._c_tokens = self._obs.counter("tokens_emitted_total")
         self._c_prompt = self._obs.counter("prompt_tokens_total")
         self._c_cached = self._obs.counter("cached_prompt_tokens_total")
@@ -325,6 +341,8 @@ class Scheduler:
         self.sampled_requests = 0     # submitted with temperature > 0
         self.preemptions = 0          # lanes evicted by preempt()
         self.resumes = 0              # preempted lanes re-admitted
+        self.shed_requests = 0        # SLO-shed before admission
+        self.deferrals = 0            # requests EDF-deferred at least once
 
     # ------------------------------------------------------------------
     # queue
@@ -539,9 +557,116 @@ class Scheduler:
 
     def _admission_order(self) -> List[Request]:
         now = self._now()
-        return sorted(self._queue,
-                      key=lambda r: (-self._eff_priority(r, now),
-                                     getattr(r, "_seq", 0)))
+
+        def base_key(r):
+            return (-self._eff_priority(r, now), getattr(r, "_seq", 0))
+
+        if not self.slo_shed:
+            return sorted(self._queue, key=base_key)
+
+        # deadline-aware ordering (slo_shed only): within an (aged)
+        # priority class, earliest-deadline-first by slack — a request
+        # whose deadline is tight admits ahead of comfortable or
+        # deadline-free groupmates (those are the DEFERRED ones; class
+        # boundaries and the aging starvation bound still hold at
+        # integer-class granularity, and deadline-free traffic keeps
+        # FCFS among itself)
+        def slo_key(r):
+            dl = self._abs_deadline(r)
+            slack = dl - now if dl is not None else float("inf")
+            return (-int(self._eff_priority(r, now)), slack,
+                    getattr(r, "_seq", 0))
+
+        order = sorted(self._queue, key=slo_key)
+        baseline = sorted(self._queue, key=base_key)
+        pos = {id(r): i for i, r in enumerate(baseline)}
+        for i, r in enumerate(order):
+            # count each request's FIRST slip behind its deadline-blind
+            # position — the defer-below-deadline decision, visible as
+            # a counter + trace instant
+            if i > pos[id(r)] and not getattr(r, "_deferred", False):
+                r._deferred = True
+                self.deferrals += 1
+                self._c_deferred.inc()
+                if self._obs.enabled:
+                    self._obs.instant(SLO_TID, "defer", "slo", now,
+                                      rid=r.rid)
+        return order
+
+    # ------------------------------------------------------------------
+    # SLO admission: deadlines, shed-on-hopeless, breach observation
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _abs_deadline(req: Request) -> Optional[float]:
+        """Absolute first-token deadline on the run clock, or None.
+        `deadline_ms` is relative to the request's ARRIVAL (queue wait
+        counts against the budget, as a user would account it)."""
+        sp = req.sampling
+        if sp is None or sp.deadline_ms is None:
+            return None
+        return req.arrival + sp.deadline_ms / 1e3
+
+    def _shed_hopeless(self) -> None:
+        """Shed queued (never-admitted) requests that cannot make their
+        deadline: already past it, or past it once the tracker's live
+        median TTFT is added to `now`. A shed is a terminal Completion
+        (finish_reason "shed", no tokens) plus a counter and a trace
+        instant — the caller gets a definitive answer now instead of a
+        uselessly late one, and the freed work protects everyone else's
+        objective. Resume requests are never shed: their lane already
+        produced (and streamed) tokens."""
+        if not self.slo_shed or not self._queue:
+            return
+        now = self._now()
+        est = self.slo.ttft_quantile(0.5) if self.slo is not None else None
+        kept: Deque[Request] = deque()
+        for r in self._queue:
+            dl = None if r.rid in self._resume_state \
+                else self._abs_deadline(r)
+            if dl is not None and (now > dl
+                                   or (est is not None
+                                       and now + est > dl)):
+                self._shed(r, now, dl, est)
+            else:
+                kept.append(r)
+        self._queue = kept
+
+    def _shed(self, req: Request, now: float, deadline: float,
+              est: Optional[float]) -> None:
+        comp = Completion(
+            rid=req.rid, prompt_len=len(req.prompt),
+            tokens=np.zeros(0, np.int32), arrival=req.arrival,
+            t_admit=now, t_first_token=now, t_done=now,
+            finish_reason="shed")
+        self.completions.append(comp)
+        self.shed_requests += 1
+        self._c_shed.inc()
+        self._c_finished["shed"].inc()
+        if self._obs.enabled:
+            self._obs.instant(
+                SLO_TID, "shed", "slo", now, rid=req.rid,
+                waited_ms=round((now - req.arrival) * 1e3, 3),
+                deadline_ms=round((deadline - req.arrival) * 1e3, 3),
+                est_ttft_ms=(round(est * 1e3, 3)
+                             if est is not None else None))
+        if self.on_event is not None:
+            self.on_event(StreamEvent(rid=req.rid, tokens=[], done=True,
+                                      completion=comp))
+
+    def _observe_ttft(self, s: "_Slot") -> None:
+        """Feed the tracker when a (non-resume) lane lands its first
+        token; an objective breach bumps the counter and triggers the
+        flight recorder."""
+        ttft = max(s.t_first - s.req.arrival, 0.0)
+        if self.slo.observe_ttft(s.t_first, ttft, s.req.priority):
+            self._c_ttft_breach.inc()
+            fr = self._obs.recorder
+            if fr is not None:
+                obj = self.slo.policy.ttft_objective_s(s.req.priority)
+                fr.breach(s.t_first, "ttft_breach", rid=s.req.rid,
+                          ttft_ms=round(ttft * 1e3, 3),
+                          objective_ms=round(obj * 1e3, 3))
 
     def _preempt_below(self, priority: int) -> bool:
         """Evict the weakest running lane whose STATIC class is strictly
@@ -585,6 +710,7 @@ class Scheduler:
         admission. With chunking disabled (prefill_chunk=0) the same
         suffix is rejected with an actionable error (suffix_bucket)
         rather than falling through to an oversized jit variant."""
+        self._shed_hopeless()
         while True:
             if self._queue and not self._free_slots():
                 top = max(r.priority for r in self._queue)
@@ -678,6 +804,8 @@ class Scheduler:
             if rec is not None:
                 self._resume_slot(p.slot, s, rec, int(tok))
                 continue
+            if self.slo is not None:
+                self._observe_ttft(s)
             if self._stop_cut(s, [int(tok)]) is not None:
                 s.stopped = True
             self._emit(s, [int(tok)], [float(tok_lp)],
@@ -763,6 +891,8 @@ class Scheduler:
             return True
         s.pending = int(first[0])
         s.t_first = self._now()
+        if self.slo is not None:
+            self._observe_ttft(s)
         if self._stop_cut(s, [s.pending]) is not None:
             s.stopped = True
         self._emit(s, [s.pending], [float(lp[0])],
@@ -842,6 +972,9 @@ class Scheduler:
         self._queue.append(resume)
         self.preemptions += 1
         self._c_preempted.inc()
+        fr = self._obs.recorder
+        if fr is not None:                # preemption-storm detection
+            fr.note_preempt(self._now())
         if self._obs.enabled:
             self._obs.instant(slot_id, "preempt", "scheduler",
                               self._now(), rid=s.req.rid, pos=s.pos,
@@ -1183,6 +1316,22 @@ class Scheduler:
                           if s.alts is not None else None))
         self.completions.append(completion)
         self._c_finished[completion.finish_reason].inc()
+        if self.slo is not None:
+            lat = max(completion.t_done - completion.arrival, 0.0)
+            if self.slo.observe_latency(completion.t_done, lat,
+                                        s.req.priority):
+                self._c_lat_breach.inc()
+                fr = self._obs.recorder
+                if fr is not None:
+                    fr.breach(completion.t_done, "latency_breach",
+                              rid=completion.rid,
+                              latency_ms=round(lat * 1e3, 3))
+            n = len(completion.tokens)
+            if n > 1:
+                self.slo.observe_tpot(
+                    completion.t_done,
+                    (completion.t_done - s.t_first) / (n - 1),
+                    s.req.priority)
         if self._obs.enabled:
             trace = s.req.trace or {}
             t_q = trace.get("queued", s.req.arrival)
